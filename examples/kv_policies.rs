@@ -1,0 +1,41 @@
+//! Middleware use case (paper §IV-B): reproduces **Table IV**.
+//!
+//! Key-value store with 300 local / 1000 total objects; 1000 PUTs then
+//! 50 000 GETs with "90% of GETs to X% of objects" skew, X = 10..90 plus a
+//! uniform row; compares Policy1 (promote on remote GET) vs Policy2
+//! (read in place).
+//!
+//! ```sh
+//! cargo run --release --example kv_policies [gets]
+//! ```
+
+use emucxl::experiments::{format_table4, run_table4, run_table4_cell, Table4Params};
+use emucxl::middleware::kv::GetPolicy;
+
+fn main() -> emucxl::Result<()> {
+    let gets = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50_000);
+    let p = Table4Params { gets, ..Default::default() };
+    eprintln!(
+        "running Table IV: {} objects ({} local), {} GETs per cell ...",
+        p.objects, p.local_capacity, p.gets
+    );
+    let rows = run_table4(p)?;
+    print!("{}", format_table4(&rows));
+
+    // Extension ablation: the §IV-A "more subtle policies" — promote only
+    // after the N-th access (filters one-hit wonders from local memory).
+    println!("\nExtension: PromoteAfter(n) — %local at 20% hot set");
+    for (label, policy) in [
+        ("Policy1 (n=1)", GetPolicy::Promote),
+        ("PromoteAfter(3)", GetPolicy::PromoteAfter(3)),
+        ("PromoteAfter(10)", GetPolicy::PromoteAfter(10)),
+        ("Policy2 (never)", GetPolicy::InPlace),
+    ] {
+        let local = run_table4_cell(&p, Some(20), policy)?;
+        println!("  {label:<18} {local:6.2}%");
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! **End-to-end driver**: the full three-layer stack on a real workload.
+//!
+//! Boots the pool coordinator (paper §VI future work) with the XLA timing
+//! artifacts on the hot path, connects N tenant clients over TCP, runs a
+//! YCSB-B mixed workload against the shared KV store plus raw pool
+//! allocations, and reports throughput and the priced virtual latency
+//! distribution per tenant.
+//!
+//! Layers exercised: L3 coordinator (routing, batching, tenancy) →
+//! PJRT runtime (AOT Pallas latency kernel per batch) → emulated device.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example multi_tenant_pool [tenants] [requests]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use emucxl::config::EmucxlConfig;
+use emucxl::coordinator::client::PoolClient;
+use emucxl::coordinator::server::{PoolConfig, PoolServer};
+use emucxl::middleware::kv::GetPolicy;
+use emucxl::util::hist::LatencyHistogram;
+use emucxl::workload::ycsb::{KvOp, YcsbGenerator, YcsbMix};
+
+fn main() -> emucxl::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tenants: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(5_000);
+
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let has_artifacts = artifacts.join("manifest.txt").exists();
+    let mut emucxl_cfg = EmucxlConfig::sized(64 << 20, 256 << 20);
+    if has_artifacts {
+        emucxl_cfg = emucxl_cfg.with_artifacts(&artifacts);
+        eprintln!("timing path: XLA artifact (AOT Pallas kernel via PJRT)");
+    } else {
+        eprintln!("timing path: native (run `make artifacts` for the XLA path)");
+    }
+
+    let cfg = PoolConfig {
+        emucxl: emucxl_cfg,
+        kv_local_capacity: 300,
+        kv_policy: GetPolicy::Promote,
+        batch: 64,
+        max_wait: Duration::from_micros(200),
+    };
+    let srv = PoolServer::start(cfg, 0)?;
+    let addr = srv.addr();
+    eprintln!("coordinator up at {addr}; {tenants} tenants x {requests} requests");
+
+    let wall = Instant::now();
+    let mut handles = vec![];
+    for t in 0..tenants {
+        handles.push(std::thread::spawn(move || -> emucxl::Result<(LatencyHistogram, u64)> {
+            let mut c = PoolClient::connect(addr, 16 << 20)?;
+            let mut gen = YcsbGenerator::new(YcsbMix::B, 1000, 256, true, t as u64);
+            let mut hist = LatencyHistogram::new();
+            let mut ops = 0u64;
+            // seed a few raw allocations too (exercise the pool API path)
+            let (raw, _) = c.alloc(65536, (t % 2) as u32)?;
+            for req in gen.batch(requests) {
+                let lat = match req.op {
+                    KvOp::Get => c.kv_get(format!("user{:06}", req.key).as_bytes())?.1,
+                    KvOp::Put => c.kv_put(
+                        format!("user{:06}", req.key).as_bytes(),
+                        &vec![0xAB; req.value_len],
+                    )?,
+                    KvOp::Delete => {
+                        c.kv_delete(format!("user{:06}", req.key).as_bytes())?;
+                        0.0
+                    }
+                };
+                if lat > 0.0 {
+                    hist.record(lat as u64);
+                }
+                ops += 1;
+                if ops % 512 == 0 {
+                    // periodic raw read/write through the pool
+                    c.write(raw, &[1u8; 4096])?;
+                    let _ = c.read(raw, 4096)?;
+                    ops += 2;
+                }
+            }
+            c.free(raw)?;
+            c.bye()?;
+            Ok((hist, ops))
+        }));
+    }
+
+    let mut merged = LatencyHistogram::new();
+    let mut total_ops = 0u64;
+    for h in handles {
+        let (hist, ops) = h.join().expect("tenant thread")?;
+        merged.merge(&hist);
+        total_ops += ops;
+    }
+    let elapsed = wall.elapsed();
+    let (flushes, priced) = srv.batcher_stats();
+
+    println!("=== multi_tenant_pool results ===");
+    println!(
+        "tenants={tenants} requests/tenant={requests} total_ops={total_ops} wall={:.2}s",
+        elapsed.as_secs_f64()
+    );
+    println!(
+        "throughput: {:.0} ops/s end-to-end",
+        total_ops as f64 / elapsed.as_secs_f64()
+    );
+    println!("virtual latency (priced by the timing artifact): {}", merged.report());
+    println!(
+        "batcher: {priced} descriptors in {flushes} flushes ({:.1} descs/flush)",
+        priced as f64 / flushes.max(1) as f64
+    );
+    println!("pool virtual time: {:.3} ms", srv.now_ns() as f64 / 1e6);
+    Ok(())
+}

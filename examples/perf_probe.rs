@@ -1,0 +1,51 @@
+//! Hot-path microprobe used during the §Perf pass (not part of the docs).
+use emucxl::api::{EmucxlContext, NODE_LOCAL};
+use emucxl::config::EmucxlConfig;
+use emucxl::mem::bitmap::PageBitmap;
+use emucxl::mem::vaspace::VaSpace;
+use emucxl::timing::desc::AccessDesc;
+use emucxl::timing::engine::TimingEngine;
+use emucxl::timing::model::TimingParams;
+use std::time::Instant;
+
+fn time<F: FnMut()>(name: &str, n: usize, mut f: F) {
+    let t = Instant::now();
+    for _ in 0..n { f(); }
+    println!("{name:<36} {:>8.0} ns/op", t.elapsed().as_nanos() as f64 / n as f64);
+}
+
+fn main() {
+    let n = 30_000;
+    // full alloc+free
+    let mut c = EmucxlContext::init(EmucxlConfig::sized(256 << 20, 256 << 20)).unwrap();
+    let t = Instant::now();
+    let addrs: Vec<_> = (0..n).map(|_| c.alloc(64, NODE_LOCAL).unwrap()).collect();
+    println!("{:<36} {:>8.0} ns/op", "ctx.alloc(64)", t.elapsed().as_nanos() as f64 / n as f64);
+    let t = Instant::now();
+    for a in addrs { c.free(a).unwrap(); }
+    println!("{:<36} {:>8.0} ns/op", "ctx.free", t.elapsed().as_nanos() as f64 / n as f64);
+
+    // write/read path
+    let a = c.alloc(4096, NODE_LOCAL).unwrap();
+    let buf = [0u8; 64];
+    time("ctx.write(64B local)", n, || { c.write(a, &buf).unwrap(); });
+    let mut out = [0u8; 64];
+    time("ctx.read(64B local)", n, || { c.read(a, &mut out).unwrap(); });
+
+    // engine record only
+    let mut e = TimingEngine::native(TimingParams::default());
+    let d = AccessDesc::read(1, 64);
+    time("engine.record", n, || { e.record(&d); });
+
+    // bitmap
+    let mut b = PageBitmap::new(65536);
+    time("bitmap.alloc+free(1)", n, || { let p = b.alloc(1).unwrap(); b.free(p, 1).unwrap(); });
+
+    // vaspace
+    let mut v = VaSpace::new(4096);
+    time("vaspace.alloc+free", n, || { let a = v.alloc(64).unwrap(); v.free(a, 64).unwrap(); });
+
+    // page zeroing cost
+    let mut page = vec![0u8; 4096];
+    time("zero 4KiB page", n, || { page.fill(0); std::hint::black_box(&page); });
+}

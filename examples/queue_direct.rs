@@ -1,0 +1,24 @@
+//! Direct-access use case (paper §IV-A): reproduces **Table III**.
+//!
+//! 15 000 enqueues + 15 000 dequeues on a linked-list queue placed entirely
+//! in local, then entirely in remote memory; reports mean ± σ over trials
+//! next to the paper's numbers.
+//!
+//! ```sh
+//! cargo run --release --example queue_direct [ops] [trials]
+//! ```
+
+use emucxl::experiments::{format_table3, run_table3, Table3Params};
+
+fn main() -> emucxl::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let p = Table3Params {
+        ops: args.first().and_then(|s| s.parse().ok()).unwrap_or(15_000),
+        trials: args.get(1).and_then(|s| s.parse().ok()).unwrap_or(10),
+        ..Default::default()
+    };
+    eprintln!("running Table III with {} ops x {} trials ...", p.ops, p.trials);
+    let rows = run_table3(p)?;
+    print!("{}", format_table3(&rows));
+    Ok(())
+}

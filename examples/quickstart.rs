@@ -1,0 +1,62 @@
+//! Quickstart: the whole Table II API in one sitting.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use emucxl::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
+use emucxl::config::EmucxlConfig;
+
+fn main() -> emucxl::Result<()> {
+    // emucxl_init: boot a 64 MiB local / 256 MiB remote appliance.
+    let mut ctx = EmucxlContext::init(EmucxlConfig::default())?;
+    println!("{}", ctx.device().topology().describe());
+
+    // emucxl_alloc on both nodes.
+    let local = ctx.alloc(4096, NODE_LOCAL)?;
+    let remote = ctx.alloc(1 << 20, NODE_REMOTE)?;
+    println!("local alloc  -> {local}  (is_local={})", ctx.is_local(local)?);
+    println!("remote alloc -> {remote} (node={})", ctx.get_numa_node(remote)?);
+
+    // emucxl_write / emucxl_read, with per-access virtual latency.
+    let t = ctx.write(local, b"hello local ddr")?;
+    println!("local write:  {t:.1} ns");
+    let t = ctx.write(remote, b"hello cxl.mem pool")?;
+    println!("remote write: {t:.1} ns (crosses the CXL controller)");
+
+    let mut buf = [0u8; 18];
+    ctx.read(remote, &mut buf)?;
+    assert_eq!(&buf, b"hello cxl.mem pool");
+
+    // emucxl_memset (paper contract: 0 or -1 only) + memcpy + memmove.
+    ctx.memset(local, -1, 64)?;
+    ctx.memcpy(local.offset(128), remote, 18)?;
+    ctx.memmove(local.offset(130), local.offset(128), 18)?; // overlapping
+
+    // emucxl_resize: grow in place (same node, data preserved).
+    let local = ctx.resize(local, 8192)?;
+    assert_eq!(ctx.get_size(local)?, 8192);
+
+    // emucxl_migrate: move the hot object into local DDR.
+    let promoted = ctx.migrate(remote, NODE_LOCAL)?;
+    println!("after migrate: is_local={}", ctx.is_local(promoted)?);
+
+    // emucxl_stats + telemetry.
+    for node in [NODE_LOCAL, NODE_REMOTE] {
+        let s = ctx.stats(node)?;
+        println!(
+            "node {}: {} B requested, {} B in pages, {} B capacity",
+            node, s.allocated_bytes, s.page_bytes, s.capacity
+        );
+    }
+    println!("\nvirtual time elapsed: {} ns", ctx.now_ns());
+    println!("{}", ctx.telemetry().report());
+    println!("controller: {}", ctx.device().controller().describe());
+
+    // emucxl_free + emucxl_exit.
+    ctx.free(local)?;
+    ctx.free(promoted)?;
+    ctx.exit();
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Trace replay through the L2 window model: generates (or loads) an
+//! access trace, replays it through the AOT-compiled scan artifact
+//! (congestion-aware), and compares against the congestion-free native
+//! replay — showing what the link-queue model adds.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example trace_replay [n_ops] [remote_frac]
+//! ```
+
+use emucxl::runtime::XlaRuntime;
+use emucxl::timing::desc::AccessDesc;
+use emucxl::timing::model::TimingParams;
+use emucxl::workload::trace::{Trace, TraceSpec};
+
+fn main() -> emucxl::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_ops: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200_000);
+    let remote_frac: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.6);
+
+    let trace = Trace::synthetic(
+        TraceSpec { n_ops, remote_frac, write_frac: 0.3, sizes: [64, 256, 4096, 65536] },
+        7,
+    );
+    let (r, w, lb, rb) = trace.totals();
+    println!(
+        "trace: {} ops | {r} reads {w} writes | {:.1} MiB local, {:.1} MiB remote",
+        trace.len(),
+        lb as f64 / (1 << 20) as f64,
+        rb as f64 / (1 << 20) as f64
+    );
+
+    let params = TimingParams::default();
+    let descs = trace.descs();
+
+    // Native, congestion-free replay (every access sees an idle link).
+    let t0 = std::time::Instant::now();
+    let native: f64 = params.latency_batch(&descs).iter().map(|&x| x as f64).sum();
+    let native_wall = t0.elapsed();
+    println!(
+        "congestion-free (native): total={:.3} ms virtual, computed in {:.1} ms wall",
+        native / 1e6,
+        native_wall.as_secs_f64() * 1e3
+    );
+
+    // Window-model replay (XLA): link-queue occupancy carried across
+    // batches adds congestion latency under remote-heavy phases.
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = match XlaRuntime::open(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("(skipping XLA window replay: {e})");
+            return Ok(());
+        }
+    };
+    let window = rt.window_model()?;
+    let chunk = window.window() * window.batch();
+    let mut rows: Vec<[f32; 4]> = descs.iter().map(|d| d.encode()).collect();
+    let pad = (chunk - rows.len() % chunk) % chunk;
+    rows.extend(std::iter::repeat(AccessDesc::pad()).take(pad));
+
+    let t1 = std::time::Instant::now();
+    let mut occ = 0.0f32;
+    let mut total = 0.0f64;
+    let mut max_ns = 0.0f32;
+    let mut peak_occ = 0.0f32;
+    for c in rows.chunks(chunk) {
+        let out = window.run(c, &params, occ)?;
+        occ = out.final_occ;
+        peak_occ = peak_occ.max(occ);
+        total += out.summary[0] as f64;
+        max_ns = max_ns.max(out.summary[1]);
+    }
+    let xla_wall = t1.elapsed();
+    println!(
+        "window model (XLA):       total={:.3} ms virtual, computed in {:.1} ms wall",
+        total / 1e6,
+        xla_wall.as_secs_f64() * 1e3
+    );
+    println!(
+        "congestion surcharge: {:+.2}% | worst access {:.0} ns | peak queue {peak_occ:.0} flits",
+        100.0 * (total - native) / native,
+        max_ns
+    );
+    Ok(())
+}

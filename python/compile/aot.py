@@ -1,0 +1,118 @@
+"""AOT lowering: JAX/Pallas programs -> HLO-text artifacts for the Rust side.
+
+Interchange format is HLO **text**, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+`xla` crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and README gotchas.
+
+Python runs ONCE, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards. A manifest (artifacts/manifest.txt, `key=value`
+lines — Rust parses it with std only) records every artifact's entry shapes
+so the runtime can validate its marshalling against what was lowered.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--batch 256] [--window 16]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.latency import DEFAULT_PARAMS, NUM_PARAMS
+
+# Artifact batch size. The Rust timing engine pads every flush to this.
+DEFAULT_BATCH = 256
+# Window length (batches per scan) of the analytics artifact.
+DEFAULT_WINDOW = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text (ids reassigned by parser).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides array constants as ``constant({...})`` and the HLO text parser
+    silently reads those back as ZEROS — the calibration mask constant was
+    destroyed this way. The AOT pipeline refuses to emit any elided text.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "{...}" in text:
+        raise RuntimeError(
+            "HLO text contains elided constants ('{...}') — the Rust loader "
+            "would read them as zeros"
+        )
+    return text
+
+
+def lower_latency_batch(batch: int) -> str:
+    desc = jax.ShapeDtypeStruct((batch, 4), jnp.float32)
+    params = jax.ShapeDtypeStruct((NUM_PARAMS,), jnp.float32)
+    return to_hlo_text(jax.jit(model.latency_batch).lower(desc, params))
+
+
+def lower_window(window: int, batch: int) -> str:
+    descs = jax.ShapeDtypeStruct((window, batch, 4), jnp.float32)
+    params = jax.ShapeDtypeStruct((NUM_PARAMS,), jnp.float32)
+    occ = jax.ShapeDtypeStruct((), jnp.float32)
+    return to_hlo_text(jax.jit(model.window_model).lower(descs, params, occ))
+
+
+def lower_calib(batch: int) -> str:
+    params = jax.ShapeDtypeStruct((NUM_PARAMS,), jnp.float32)
+    desc = jax.ShapeDtypeStruct((batch, 4), jnp.float32)
+    obs = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    return to_hlo_text(jax.jit(model.calib_step).lower(params, desc, obs, lr))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--window", type=int, default=DEFAULT_WINDOW)
+    # Back-compat with the scaffold Makefile (single-file mode).
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir if args.out is None else os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    artifacts = {
+        "latency_batch.hlo.txt": lower_latency_batch(args.batch),
+        "window_model.hlo.txt": lower_window(args.window, args.batch),
+        "calib_step.hlo.txt": lower_calib(args.batch),
+    }
+    for name, text in artifacts.items():
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>8} chars  {path}")
+
+    manifest = [
+        ("batch", str(args.batch)),
+        ("window", str(args.window)),
+        ("num_params", str(NUM_PARAMS)),
+        ("latency_batch", "latency_batch.hlo.txt"),
+        ("window_model", "window_model.hlo.txt"),
+        ("calib_step", "calib_step.hlo.txt"),
+        ("default_params", ",".join(repr(p) for p in DEFAULT_PARAMS)),
+    ]
+    mpath = os.path.join(out_dir, "manifest.txt")
+    with open(mpath, "w") as f:
+        for k, v in manifest:
+            f.write(f"{k}={v}\n")
+    print(f"wrote manifest {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""L1 — Pallas kernel for the batched CXL access-latency model.
+
+This is the compute hot-spot of the emulator: given a batch of access
+descriptors, compute the latency (in nanoseconds) each access experiences
+on the emulated CXL fabric. In the paper's setup this arithmetic is done
+implicitly by the 2-socket NUMA hardware; here it is an explicit, calibrated
+model so the emulation is deterministic and configurable.
+
+Descriptor layout (f32, shape ``(B, 4)``)::
+
+    col 0  op      0 = read, 1 = write, 2 = mmio (CXL.io config-path access)
+    col 1  node    0 = local DDR, 1 = remote (CXL.mem) memory
+    col 2  bytes   access size in bytes
+    col 3  qdepth  outstanding requests on the link when this access issues
+
+Parameter vector (f32, shape ``(16,)``) — see :data:`PARAM_NAMES`.
+
+Latency model (elementwise over the batch)::
+
+    flits    = max(1, ceil(bytes / flit_bytes))
+    ser_ns   = flits * flit_bytes / bytes_per_ns[node]
+    proto_ns = flits * flit_overhead_ns        (remote only)
+    wf       = write_factor if op == write else 1
+    q_ns     = qdepth * qdelay_ns[node]
+    lat      = base_ns[node] + (ser_ns + proto_ns) * wf + q_ns
+    lat      = mmio_ns + q_ns                  if op == mmio
+
+The kernel MUST be executed with ``interpret=True`` — real-TPU lowering
+emits a Mosaic custom-call the CPU PJRT plugin cannot run. The TPU mapping
+(BlockSpec tiling, VMEM residency of the parameter vector) is kept anyway so
+the same source targets hardware; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Names/indices of the timing-model parameter vector. The Rust native
+# mirror (rust/src/timing/model.rs) hard-codes the same layout; tests on
+# both sides pin it.
+PARAM_NAMES = (
+    "local_base_ns",      # 0  DDR load-to-use latency
+    "remote_base_ns",     # 1  CXL.mem round-trip base latency
+    "local_bytes_per_ns", # 2  local DRAM bandwidth (bytes/ns == GB/s)
+    "remote_bytes_per_ns",# 3  CXL link bandwidth (PCIe5 x16 ~ 32-64 GB/s)
+    "flit_bytes",         # 4  CXL flit payload granularity (64 B)
+    "flit_overhead_ns",   # 5  per-flit protocol overhead on the remote path
+    "remote_qdelay_ns",   # 6  per outstanding request, remote link
+    "write_factor",       # 7  multiplicative write penalty on serialization
+    "local_qdelay_ns",    # 8  per outstanding request, local memory ctrl
+    "read_extra_ns",      # 9  additive read tweak (calibration slack)
+    "mmio_ns",            # 10 CXL.io configuration access cost
+    "drain_flits_per_step",  # 11 L2 window model: link drain rate
+    "occ_to_qdepth",      # 12 L2: queued flits -> effective qdepth entries
+    "max_occ_flits",      # 13 L2: link queue capacity (flits)
+    "inj_scale",          # 14 L2: fraction of remote flits entering queue
+    "reserved15",         # 15
+)
+
+NUM_PARAMS = len(PARAM_NAMES)
+
+#: Default calibration: local DDR5 ~80 ns / ~100 GB/s; CXL.mem remote
+#: ~250 ns base (POND-style NUMA-latency emulation) / 32 GB/s (PCIe5 x16
+#: per direction); 64 B flits.
+DEFAULT_PARAMS = (
+    80.0,    # local_base_ns
+    250.0,   # remote_base_ns
+    100.0,   # local_bytes_per_ns
+    32.0,    # remote_bytes_per_ns
+    64.0,    # flit_bytes
+    2.0,     # flit_overhead_ns
+    10.0,    # remote_qdelay_ns
+    1.1,     # write_factor
+    1.0,     # local_qdelay_ns
+    0.0,     # read_extra_ns
+    300.0,   # mmio_ns
+    512.0,   # drain_flits_per_step
+    0.01,    # occ_to_qdepth
+    4096.0,  # max_occ_flits
+    1.0,     # inj_scale
+    0.0,     # reserved15
+)
+
+# Batch tile processed by one grid step. 128 descriptors x 4 f32 = 2 KiB in
+# VMEM per block — far under the ~16 MiB VMEM budget; the (16,) parameter
+# vector stays resident across the whole grid.
+BLOCK_B = 128
+
+OP_READ, OP_WRITE, OP_MMIO = 0.0, 1.0, 2.0
+NODE_LOCAL, NODE_REMOTE = 0.0, 1.0
+
+
+def _latency_block(desc, params):
+    """The latency model on one (tile_b, 4) descriptor block. Shared by the
+    Pallas kernel body and (via ref.py) the pure-jnp oracle so the two can
+    only diverge through memory movement, never through math."""
+    op = desc[:, 0]
+    node = desc[:, 1]
+    nbytes = desc[:, 2]
+    qdepth = desc[:, 3]
+
+    is_remote = node >= 0.5
+    is_write = jnp.abs(op - OP_WRITE) < 0.5
+    is_mmio = op >= (OP_MMIO - 0.5)
+
+    base = jnp.where(is_remote, params[1], params[0])
+    bpns = jnp.where(is_remote, params[3], params[2])
+    flit = params[4]
+    flits = jnp.maximum(jnp.ceil(nbytes / flit), 1.0)
+    ser_ns = flits * flit / bpns
+    proto_ns = jnp.where(is_remote, flits * params[5], 0.0)
+    wf = jnp.where(is_write, params[7], 1.0)
+    q_ns = qdepth * jnp.where(is_remote, params[6], params[8])
+    lat = base + (ser_ns + proto_ns) * wf + q_ns + params[9]
+    lat = jnp.where(is_mmio, params[10] + q_ns, lat)
+    return lat
+
+
+def _latency_kernel(desc_ref, params_ref, out_ref):
+    """Pallas kernel body: one BLOCK_B tile of descriptors -> latencies."""
+    out_ref[...] = _latency_block(desc_ref[...], params_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def cxl_latency_pallas(desc, params, *, block_b: int = BLOCK_B):
+    """Batched CXL access latency via the Pallas kernel.
+
+    Args:
+      desc:   f32[B, 4] access descriptors; B must be a multiple of block_b
+              (the Rust caller pads with zero descriptors).
+      params: f32[16] timing-model parameters (see PARAM_NAMES).
+
+    Returns:
+      f32[B] latency of each access in nanoseconds.
+    """
+    b = desc.shape[0]
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not a multiple of block_b {block_b}")
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _latency_kernel,
+        grid=grid,
+        in_specs=[
+            # HBM -> VMEM schedule: stream one (block_b, 4) descriptor tile
+            # per grid step...
+            pl.BlockSpec((block_b, 4), lambda i: (i, 0)),
+            # ...while the parameter vector stays VMEM-resident (same block
+            # for every step, so the pipeline keeps it loaded).
+            pl.BlockSpec((NUM_PARAMS,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(desc, params)
+
+
+def default_params() -> jnp.ndarray:
+    """The default calibration as an f32 vector."""
+    return jnp.asarray(DEFAULT_PARAMS, dtype=jnp.float32)

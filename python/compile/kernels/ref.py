@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the L1 Pallas latency kernel.
+
+The oracle shares the *math* with the kernel (both call
+``latency._latency_block``) but goes through no Pallas machinery — no grid,
+no BlockSpec, no interpreter. pytest asserts `allclose` between the two for
+swept shapes/values (python/tests/test_kernel.py), so any divergence
+introduced by the Pallas memory pipeline is caught at build time.
+
+The oracle is also the *differentiable* path: calibration (model.py) takes
+gradients through this implementation, sidestepping pallas_call autodiff.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .latency import _latency_block
+
+
+@jax.jit
+def cxl_latency_ref(desc, params):
+    """Reference latency model: f32[B,4] desc, f32[16] params -> f32[B]."""
+    desc = jnp.asarray(desc, dtype=jnp.float32)
+    params = jnp.asarray(params, dtype=jnp.float32)
+    return _latency_block(desc, params)

@@ -1,0 +1,107 @@
+"""L2 — JAX compute graphs composed from the L1 kernel.
+
+Three build-time-lowered programs (see aot.py):
+
+1. ``latency_batch``  — single-batch latency: the artifact the Rust timing
+   engine executes on the emulator's hot path.
+2. ``window_model``   — ``lax.scan`` over a window of W batches carrying the
+   CXL link-queue occupancy: models congestion across batches. Used by the
+   trace-replay analytics path.
+3. ``calib_step``     — MSE loss + gradient w.r.t. the timing parameters
+   against observed latencies: lets a user fit the emulation model to a real
+   machine's measurements. Differentiates through the reference
+   implementation (identical math to the kernel; pinned by tests).
+
+All programs are pure functions of arrays — no Python on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.latency import NUM_PARAMS, cxl_latency_pallas
+from .kernels.ref import cxl_latency_ref
+
+# Calibration fits ONLY the two base latencies — the quantities a user
+# actually measures on a target machine (pointer-chase latency to each
+# node, as POND does). The remaining parameters are physical constants of
+# the link configuration (bandwidth, flit size) or window-model tuning, and
+# their gradient scales differ by orders of magnitude, which makes joint
+# first-order descent with one learning rate diverge.
+CALIB_MASK = jnp.asarray([1.0, 1.0] + [0.0] * (NUM_PARAMS - 2), jnp.float32)
+
+
+def latency_batch(desc, params):
+    """f32[B,4], f32[16] -> f32[B]. Thin wrapper so the artifact's entry
+    computation is the Pallas kernel itself."""
+    return cxl_latency_pallas(desc, params)
+
+
+def window_model(descs, params, init_occ):
+    """Scan a window of descriptor batches through the link-congestion model.
+
+    Args:
+      descs:    f32[W, B, 4] — W consecutive batches of B descriptors.
+      params:   f32[16] timing parameters (PARAM_NAMES in kernels/latency.py).
+      init_occ: f32[] — link queue occupancy (flits) carried in from the
+                previous window.
+
+    Returns:
+      (latencies f32[W, B], final_occ f32[], summary f32[4]) where summary =
+      [total_ns, max_ns, local_bytes, remote_bytes].
+
+    Congestion model: each batch's remote accesses see an effective queue
+    depth increased by ``occ * occ_to_qdepth``; the queue gains
+    ``inj_scale * remote_flits`` and drains ``drain_flits_per_step`` per
+    batch, clamped to ``[0, max_occ_flits]``.
+    """
+    drain = params[11]
+    occ_to_q = params[12]
+    max_occ = params[13]
+    inj = params[14]
+    flit = params[4]
+
+    def step(occ, desc):
+        is_remote = desc[:, 1] >= 0.5
+        # Effective qdepth: descriptor qdepth + queue pressure (remote only).
+        extra_q = jnp.where(is_remote, occ * occ_to_q, 0.0)
+        desc_eff = desc.at[:, 3].add(extra_q)
+        lat = cxl_latency_pallas(desc_eff, params)
+        flits = jnp.maximum(jnp.ceil(desc[:, 2] / flit), 1.0)
+        remote_flits = jnp.sum(jnp.where(is_remote, flits, 0.0))
+        occ_next = jnp.clip(occ + inj * remote_flits - drain, 0.0, max_occ)
+        return occ_next, lat
+
+    final_occ, lats = jax.lax.scan(step, init_occ, descs)
+
+    nbytes = descs[:, :, 2]
+    is_remote = descs[:, :, 1] >= 0.5
+    summary = jnp.stack(
+        [
+            jnp.sum(lats),
+            jnp.max(lats),
+            jnp.sum(jnp.where(~is_remote, nbytes, 0.0)),
+            jnp.sum(jnp.where(is_remote, nbytes, 0.0)),
+        ]
+    )
+    return lats, final_occ, summary
+
+
+def calib_loss(params, desc, observed_ns):
+    """MSE between modelled and observed latency, in (microseconds)^2 to
+    keep the loss O(1) for ns-scale values."""
+    pred = cxl_latency_ref(desc, params)
+    err = (pred - observed_ns) / 1000.0
+    return jnp.mean(err * err)
+
+
+def calib_step(params, desc, observed_ns, lr):
+    """One masked gradient-descent step on the timing parameters.
+
+    Returns (loss f32[], new_params f32[16]). The mask freezes the window-
+    model tail so calibration never perturbs congestion bookkeeping.
+    """
+    loss, grad = jax.value_and_grad(calib_loss)(params, desc, observed_ns)
+    new_params = params - lr * CALIB_MASK * grad
+    return loss, new_params

@@ -1,0 +1,171 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle, plus model properties.
+
+This is the CORE correctness signal for the compute layer: hypothesis sweeps
+batch shapes and descriptor values; every sweep asserts allclose between the
+Pallas kernel (interpret mode) and the reference implementation, then pins
+the physical properties the emulator relies on (remote >= local, writes cost
+more on the link, latency monotone in size and queue depth).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.latency import (
+    BLOCK_B,
+    DEFAULT_PARAMS,
+    NUM_PARAMS,
+    PARAM_NAMES,
+    cxl_latency_pallas,
+    default_params,
+)
+from compile.kernels.ref import cxl_latency_ref
+
+hypothesis.settings.register_profile(
+    "build", settings(max_examples=40, deadline=None)
+)
+hypothesis.settings.load_profile("build")
+
+
+def make_desc(rng, b):
+    op = rng.integers(0, 3, size=b).astype(np.float32)
+    node = rng.integers(0, 2, size=b).astype(np.float32)
+    nbytes = rng.choice([8, 64, 256, 4096, 65536, 2 << 20], size=b).astype(
+        np.float32
+    )
+    qdepth = rng.integers(0, 64, size=b).astype(np.float32)
+    return np.stack([op, node, nbytes, qdepth], axis=1)
+
+
+def desc_row(op, node, nbytes, qdepth=0.0):
+    return np.asarray([op, node, nbytes, qdepth], dtype=np.float32)
+
+
+def ref1(row, params=None):
+    p = default_params() if params is None else params
+    pad = np.zeros((BLOCK_B, 4), np.float32)
+    pad[0] = row
+    return float(cxl_latency_ref(jnp.asarray(pad), p)[0])
+
+
+class TestKernelVsRef:
+    @given(
+        blocks=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_allclose_random(self, blocks, seed):
+        rng = np.random.default_rng(seed)
+        desc = make_desc(rng, blocks * BLOCK_B)
+        params = default_params()
+        got = cxl_latency_pallas(jnp.asarray(desc), params)
+        want = cxl_latency_ref(jnp.asarray(desc), params)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    @given(
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        scale=st.floats(min_value=0.1, max_value=10.0),
+    )
+    def test_allclose_random_params(self, seed, scale):
+        """Random (positive) parameter vectors, not just the default."""
+        rng = np.random.default_rng(seed)
+        desc = make_desc(rng, BLOCK_B)
+        params = jnp.asarray(
+            np.asarray(DEFAULT_PARAMS, np.float32)
+            * rng.uniform(0.5, 2.0, NUM_PARAMS).astype(np.float32)
+            * np.float32(scale)
+        )
+        got = cxl_latency_pallas(jnp.asarray(desc), params)
+        want = cxl_latency_ref(jnp.asarray(desc), params)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_non_multiple_batch_rejected(self):
+        desc = jnp.zeros((BLOCK_B + 1, 4), jnp.float32)
+        with pytest.raises(ValueError, match="multiple"):
+            cxl_latency_pallas(desc, default_params())
+
+    def test_multi_block_grid_matches_single(self):
+        """Grid tiling must be pure partitioning: concatenating two batches
+        gives the concatenation of their latencies."""
+        rng = np.random.default_rng(7)
+        a = make_desc(rng, BLOCK_B)
+        b = make_desc(rng, BLOCK_B)
+        params = default_params()
+        both = cxl_latency_pallas(jnp.asarray(np.concatenate([a, b])), params)
+        la = cxl_latency_pallas(jnp.asarray(a), params)
+        lb = cxl_latency_pallas(jnp.asarray(b), params)
+        np.testing.assert_allclose(
+            np.asarray(both), np.concatenate([np.asarray(la), np.asarray(lb)])
+        )
+
+
+class TestModelProperties:
+    def test_remote_costs_more_than_local(self):
+        for op in (0.0, 1.0):
+            for size in (8.0, 4096.0, 1e6):
+                local = ref1(desc_row(op, 0.0, size))
+                remote = ref1(desc_row(op, 1.0, size))
+                assert remote > local, (op, size)
+
+    @given(
+        size1=st.floats(min_value=1, max_value=1e8),
+        size2=st.floats(min_value=1, max_value=1e8),
+    )
+    def test_monotone_in_size(self, size1, size2):
+        lo, hi = sorted([size1, size2])
+        for node in (0.0, 1.0):
+            assert ref1(desc_row(0.0, node, lo)) <= ref1(
+                desc_row(0.0, node, hi)
+            ) * (1 + 1e-6)
+
+    @given(q1=st.integers(0, 1000), q2=st.integers(0, 1000))
+    def test_monotone_in_qdepth(self, q1, q2):
+        lo, hi = sorted([q1, q2])
+        for node in (0.0, 1.0):
+            assert ref1(desc_row(0.0, node, 64.0, lo)) <= ref1(
+                desc_row(0.0, node, 64.0, hi)
+            )
+
+    def test_write_costs_more_on_remote(self):
+        r = ref1(desc_row(0.0, 1.0, 4096.0))
+        w = ref1(desc_row(1.0, 1.0, 4096.0))
+        assert w > r
+
+    def test_mmio_is_size_independent(self):
+        a = ref1(desc_row(2.0, 1.0, 64.0))
+        b = ref1(desc_row(2.0, 1.0, 1e7))
+        assert a == b
+
+    def test_min_one_flit(self):
+        """A 1-byte access pays for a full flit."""
+        one = ref1(desc_row(0.0, 1.0, 1.0))
+        full = ref1(desc_row(0.0, 1.0, DEFAULT_PARAMS[4]))
+        assert one == full
+
+    def test_default_ratio_matches_numa_band(self):
+        """Table III context: remote ops are 'marginally costly', NUMA-like —
+        the 64 B remote/local latency ratio should land in [1.5, 6] (raw
+        memory latency; end-to-end op ratios are diluted by compute cost)."""
+        local = ref1(desc_row(0.0, 0.0, 64.0))
+        remote = ref1(desc_row(0.0, 1.0, 64.0))
+        assert 1.5 <= remote / local <= 6.0
+
+    def test_param_vector_layout_pinned(self):
+        assert NUM_PARAMS == 16
+        assert PARAM_NAMES[0] == "local_base_ns"
+        assert PARAM_NAMES[10] == "mmio_ns"
+        assert len(DEFAULT_PARAMS) == NUM_PARAMS
+
+
+class TestDtypes:
+    @given(dtype=st.sampled_from([np.float64, np.int32, np.float16]))
+    def test_ref_casts_to_f32(self, dtype):
+        """Oracle accepts any castable dtype; kernel path is f32-only by
+        construction (Rust always sends f32)."""
+        desc = np.zeros((BLOCK_B, 4), dtype=dtype)
+        desc[:, 2] = 64
+        out = cxl_latency_ref(jnp.asarray(desc), default_params())
+        assert out.dtype == jnp.float32

@@ -1,0 +1,173 @@
+"""L2 correctness: window model (scan + congestion) and calibration step."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels.latency import BLOCK_B, DEFAULT_PARAMS, NUM_PARAMS, default_params
+from compile.kernels.ref import cxl_latency_ref
+
+hypothesis.settings.register_profile(
+    "build", settings(max_examples=25, deadline=None)
+)
+hypothesis.settings.load_profile("build")
+
+W, B = 4, BLOCK_B
+
+
+def make_descs(seed, w=W, b=B, remote_frac=0.5):
+    rng = np.random.default_rng(seed)
+    op = rng.integers(0, 2, size=(w, b)).astype(np.float32)
+    node = (rng.random((w, b)) < remote_frac).astype(np.float32)
+    nbytes = rng.choice([64, 4096, 65536], size=(w, b)).astype(np.float32)
+    qdepth = rng.integers(0, 8, size=(w, b)).astype(np.float32)
+    return np.stack([op, node, nbytes, qdepth], axis=2)
+
+
+class TestWindowModel:
+    def test_shapes(self):
+        descs = jnp.asarray(make_descs(0))
+        lats, occ, summary = model.window_model(
+            descs, default_params(), jnp.float32(0.0)
+        )
+        assert lats.shape == (W, B)
+        assert occ.shape == ()
+        assert summary.shape == (4,)
+
+    def test_zero_occupancy_matches_per_batch_kernel(self):
+        """With occ_to_qdepth = 0 the scan must degenerate to independent
+        per-batch kernel calls."""
+        descs = make_descs(1)
+        params = np.asarray(DEFAULT_PARAMS, np.float32)
+        params[12] = 0.0  # occ_to_qdepth
+        lats, _, _ = model.window_model(
+            jnp.asarray(descs), jnp.asarray(params), jnp.float32(0.0)
+        )
+        for w in range(W):
+            want = cxl_latency_ref(jnp.asarray(descs[w]), jnp.asarray(params))
+            np.testing.assert_allclose(
+                np.asarray(lats[w]), np.asarray(want), rtol=1e-6
+            )
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_occupancy_bounded(self, seed):
+        descs = jnp.asarray(make_descs(seed, remote_frac=1.0))
+        params = np.asarray(DEFAULT_PARAMS, np.float32)
+        params[11] = 0.0  # no drain: worst case accumulation
+        _, occ, _ = model.window_model(
+            descs, jnp.asarray(params), jnp.float32(0.0)
+        )
+        assert 0.0 <= float(occ) <= params[13] + 1e-3
+
+    def test_congestion_increases_latency(self):
+        """Carried-in occupancy must not decrease any remote latency."""
+        descs = jnp.asarray(make_descs(3, remote_frac=1.0))
+        p = default_params()
+        cold, _, _ = model.window_model(descs, p, jnp.float32(0.0))
+        hot, _, _ = model.window_model(descs, p, jnp.float32(4096.0))
+        assert np.all(np.asarray(hot) >= np.asarray(cold) - 1e-5)
+        assert np.asarray(hot).sum() > np.asarray(cold).sum()
+
+    def test_local_only_ignores_congestion(self):
+        descs = jnp.asarray(make_descs(4, remote_frac=0.0))
+        p = default_params()
+        cold, _, _ = model.window_model(descs, p, jnp.float32(0.0))
+        hot, _, _ = model.window_model(descs, p, jnp.float32(4096.0))
+        np.testing.assert_allclose(np.asarray(cold), np.asarray(hot))
+
+    def test_summary_byte_accounting(self):
+        descs = make_descs(5)
+        _, _, summary = model.window_model(
+            jnp.asarray(descs), default_params(), jnp.float32(0.0)
+        )
+        nbytes = descs[:, :, 2]
+        remote = descs[:, :, 1] >= 0.5
+        np.testing.assert_allclose(
+            float(summary[2]), nbytes[~remote].sum(), rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            float(summary[3]), nbytes[remote].sum(), rtol=1e-6
+        )
+
+    def test_drain_reduces_final_occupancy(self):
+        descs = jnp.asarray(make_descs(6, remote_frac=1.0))
+        p_slow = np.asarray(DEFAULT_PARAMS, np.float32)
+        p_slow[11] = 0.0
+        p_fast = p_slow.copy()
+        p_fast[11] = 1e9
+        _, occ_slow, _ = model.window_model(
+            descs, jnp.asarray(p_slow), jnp.float32(0.0)
+        )
+        _, occ_fast, _ = model.window_model(
+            descs, jnp.asarray(p_fast), jnp.float32(0.0)
+        )
+        assert float(occ_fast) <= float(occ_slow)
+        assert float(occ_fast) == 0.0
+
+
+class TestCalibration:
+    def test_grad_matches_finite_difference(self):
+        rng = np.random.default_rng(0)
+        desc = jnp.asarray(
+            np.stack(
+                [
+                    rng.integers(0, 2, B).astype(np.float32),
+                    rng.integers(0, 2, B).astype(np.float32),
+                    rng.choice([64, 4096], B).astype(np.float32),
+                    rng.integers(0, 8, B).astype(np.float32),
+                ],
+                axis=1,
+            )
+        )
+        params = default_params()
+        obs = cxl_latency_ref(desc, params) * 1.07  # mislabeled by 7%
+        g = jax.grad(model.calib_loss)(params, desc, obs)
+        # central finite differences on a few calibrated indices
+        for i in (0, 1, 3, 6):
+            eps = 1e-2
+            pp = params.at[i].add(eps)
+            pm = params.at[i].add(-eps)
+            fd = (
+                model.calib_loss(pp, desc, obs) - model.calib_loss(pm, desc, obs)
+            ) / (2 * eps)
+            np.testing.assert_allclose(float(g[i]), float(fd), rtol=2e-2, atol=1e-6)
+
+    def test_calib_converges_toward_observed(self):
+        """Gradient descent recovers the base latencies of a target machine
+        whose local/remote bases are 40% / 60% off."""
+        rng = np.random.default_rng(1)
+        desc = jnp.asarray(
+            np.stack(
+                [
+                    np.zeros(B, np.float32),
+                    rng.integers(0, 2, B).astype(np.float32),
+                    rng.choice([64, 4096], B).astype(np.float32),
+                    np.zeros(B, np.float32),
+                ],
+                axis=1,
+            )
+        )
+        true_params = default_params().at[0].set(112.0).at[1].set(400.0)
+        obs = cxl_latency_ref(desc, true_params)
+        params = default_params()
+        loss0 = float(model.calib_loss(params, desc, obs))
+        # lr is large because the loss is measured in (µs)^2 of ns-scale
+        # quantities — gradients w.r.t. the parameters are O(1e-6).
+        for _ in range(300):
+            loss, params = model.calib_step(params, desc, obs, jnp.float32(1e5))
+        assert float(loss) < loss0 * 1e-4, (loss0, float(loss))
+        np.testing.assert_allclose(float(params[0]), 112.0, atol=1.0)
+        np.testing.assert_allclose(float(params[1]), 400.0, atol=1.0)
+
+    def test_mask_freezes_non_base_params(self):
+        desc = jnp.zeros((B, 4), jnp.float32).at[:, 2].set(64.0)
+        params = default_params()
+        obs = cxl_latency_ref(desc, params) * 2.0
+        _, new_params = model.calib_step(params, desc, obs, jnp.float32(1.0))
+        np.testing.assert_array_equal(
+            np.asarray(new_params[2:]), np.asarray(params[2:])
+        )

@@ -1,0 +1,96 @@
+#![allow(dead_code)]
+//! Minimal bench harness (criterion is not in the offline vendored crate
+//! set): warmup + sampled wall-clock measurement with mean ± σ reporting,
+//! plus table-row helpers shared by the paper-reproduction benches.
+
+use std::time::Instant;
+
+/// Result of one measured case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    /// nanoseconds per iteration, one entry per sample.
+    pub samples_ns: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let n = self.samples_ns.len();
+        if n < 2 {
+            return 0.0;
+        }
+        (self.samples_ns.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn report(&self) -> String {
+        let (m, sd) = (self.mean(), self.stddev());
+        if m > 1e6 {
+            format!("{:<42} {:>12.3} ms/iter ± {:>8.3}", self.name, m / 1e6, sd / 1e6)
+        } else if m > 1e3 {
+            format!("{:<42} {:>12.3} µs/iter ± {:>8.3}", self.name, m / 1e3, sd / 1e3)
+        } else {
+            format!("{:<42} {:>12.1} ns/iter ± {:>8.1}", self.name, m, sd)
+        }
+    }
+}
+
+/// Measure `f` (one logical iteration per call): `warmup` unmeasured calls,
+/// then `samples` measured ones.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        out.push(t.elapsed().as_nanos() as f64);
+    }
+    let m = Measurement { name: name.to_string(), samples_ns: out };
+    println!("{}", m.report());
+    m
+}
+
+/// Measure throughput: run `f` once per sample, where one call performs
+/// `ops` operations; report ns/op and Mops/s.
+pub fn bench_ops<F: FnMut()>(
+    name: &str,
+    ops: u64,
+    warmup: usize,
+    samples: usize,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut per_op = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        f();
+        per_op.push(t.elapsed().as_nanos() as f64 / ops as f64);
+    }
+    let m = Measurement { name: name.to_string(), samples_ns: per_op };
+    println!(
+        "{}   ({:.2} Mops/s)",
+        m.report(),
+        1e3 / m.mean()
+    );
+    m
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Prevent the optimizer from eliding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,90 @@
+//! Ablation A4: coordinator scaling — throughput and latency of the pool
+//! daemon under 1..8 concurrent tenants, with the dynamic timing batcher
+//! on the hot path (XLA artifact when available).
+//!
+//! Run: `make artifacts && cargo bench --bench coordinator`
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use common::section;
+use emucxl::config::EmucxlConfig;
+use emucxl::coordinator::client::PoolClient;
+use emucxl::coordinator::server::{PoolConfig, PoolServer};
+use emucxl::middleware::kv::GetPolicy;
+
+const OPS_PER_TENANT: usize = 2_000;
+
+fn run_scale(tenants: usize, artifacts: Option<std::path::PathBuf>) -> (f64, f64) {
+    let mut emucxl_cfg = EmucxlConfig::sized(64 << 20, 256 << 20);
+    if let Some(dir) = artifacts {
+        emucxl_cfg = emucxl_cfg.with_artifacts(dir);
+    }
+    let cfg = PoolConfig {
+        emucxl: emucxl_cfg,
+        kv_local_capacity: 300,
+        kv_policy: GetPolicy::Promote,
+        batch: 64,
+        max_wait: Duration::from_micros(200),
+    };
+    let srv = PoolServer::start(cfg, 0).unwrap();
+    let addr = srv.addr();
+
+    let wall = Instant::now();
+    let mut handles = vec![];
+    for t in 0..tenants {
+        handles.push(std::thread::spawn(move || {
+            let mut c = PoolClient::connect(addr, 16 << 20).unwrap();
+            let (buf, _) = c.alloc(4096, (t % 2) as u32).unwrap();
+            let data = vec![0xEF; 1024];
+            for i in 0..OPS_PER_TENANT {
+                match i % 4 {
+                    0 => {
+                        c.write(buf, &data).unwrap();
+                    }
+                    1 => {
+                        let _ = c.read(buf, 1024).unwrap();
+                    }
+                    2 => {
+                        c.kv_put(format!("t{t}k{}", i % 100).as_bytes(), &data).unwrap();
+                    }
+                    _ => {
+                        let _ = c.kv_get(format!("t{t}k{}", i % 100).as_bytes()).unwrap();
+                    }
+                }
+            }
+            c.bye().unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = wall.elapsed().as_secs_f64();
+    let total_ops = (tenants * OPS_PER_TENANT) as f64;
+    let (flushes, priced) = srv.batcher_stats();
+    (total_ops / secs, priced as f64 / flushes.max(1) as f64)
+}
+
+fn main() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let has = artifacts.join("manifest.txt").exists();
+
+    section("coordinator scaling (native pricing)");
+    println!("{:<10} {:>14} {:>18}", "tenants", "ops/s", "descs per flush");
+    for tenants in [1usize, 2, 4, 8] {
+        let (tput, batchiness) = run_scale(tenants, None);
+        println!("{tenants:<10} {tput:>14.0} {batchiness:>18.1}");
+    }
+
+    if has {
+        section("coordinator scaling (XLA artifact pricing on the hot path)");
+        println!("{:<10} {:>14} {:>18}", "tenants", "ops/s", "descs per flush");
+        for tenants in [1usize, 2, 4, 8] {
+            let (tput, batchiness) = run_scale(tenants, Some(artifacts.clone()));
+            println!("{tenants:<10} {tput:>14.0} {batchiness:>18.1}");
+        }
+    } else {
+        println!("(XLA section skipped — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,66 @@
+//! Ablation A3: migrate / resize cost vs object size and direction —
+//! the data-movement primitives of Table II under load.
+//!
+//! Run: `cargo bench --bench migrate`
+
+mod common;
+
+use common::{bench, section};
+use emucxl::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
+use emucxl::config::EmucxlConfig;
+
+fn ctx() -> EmucxlContext {
+    EmucxlContext::init(EmucxlConfig::sized(64 << 20, 256 << 20)).unwrap()
+}
+
+fn main() {
+    section("migrate local->remote (wall + virtual)");
+    for &size in &[4096usize, 65536, 1 << 20, 4 << 20] {
+        let mut c = ctx();
+        let mut addr = c.alloc(size, NODE_LOCAL).unwrap();
+        let mut node = NODE_LOCAL;
+        let v0 = c.now_ns();
+        let m = bench(&format!("migrate {:>7} B round trip", size), 1, 8, || {
+            let target = if node == NODE_LOCAL { NODE_REMOTE } else { NODE_LOCAL };
+            addr = c.migrate(addr, target).unwrap();
+            node = target;
+        });
+        let virt_per = (c.now_ns() - v0) as f64 / (m.samples_ns.len() + 1) as f64;
+        println!("    -> virtual cost {:.1} µs/migration", virt_per / 1e3);
+    }
+
+    section("resize grow/shrink");
+    for &(from, to) in &[(4096usize, 8192usize), (1 << 20, 2 << 20), (1 << 20, 4096)] {
+        let mut c = ctx();
+        let mut addr = c.alloc(from, NODE_REMOTE).unwrap();
+        let mut big = false;
+        bench(&format!("resize {from}B <-> {to}B"), 1, 8, || {
+            addr = c.resize(addr, if big { from } else { to }).unwrap();
+            big = !big;
+        });
+    }
+
+    section("memcpy cross-node vs same-node (1 MiB)");
+    let mut c = ctx();
+    let a = c.alloc(1 << 20, NODE_LOCAL).unwrap();
+    let b = c.alloc(1 << 20, NODE_LOCAL).unwrap();
+    let r = c.alloc(1 << 20, NODE_REMOTE).unwrap();
+    bench("memcpy local->local 1MiB", 2, 10, || {
+        c.memcpy(b, a, 1 << 20).unwrap();
+    });
+    bench("memcpy local->remote 1MiB", 2, 10, || {
+        c.memcpy(r, a, 1 << 20).unwrap();
+    });
+    let v0 = c.now_ns();
+    c.memcpy(b, a, 1 << 20).unwrap();
+    let local_virt = c.now_ns() - v0;
+    let v1 = c.now_ns();
+    c.memcpy(r, a, 1 << 20).unwrap();
+    let remote_virt = c.now_ns() - v1;
+    println!(
+        "\nvirtual memcpy cost 1MiB: local->local {:.1} µs, local->remote {:.1} µs ({:.2}x)",
+        local_virt as f64 / 1e3,
+        remote_virt as f64 / 1e3,
+        remote_virt as f64 / local_virt as f64
+    );
+}

@@ -1,0 +1,84 @@
+//! Ablation A2: slab middleware vs raw `emucxl_alloc` for small objects —
+//! the optimization §IV-B motivates ("A slab allocator can optimize memory
+//! usage by allocating page-aligned regions, and allocating small regions
+//! to user level memory requests").
+//!
+//! Run: `cargo bench --bench slab`
+
+mod common;
+
+use common::{bench_ops, section};
+use emucxl::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
+use emucxl::config::EmucxlConfig;
+use emucxl::middleware::slab::SlabAllocator;
+use emucxl::util::rng::Rng;
+
+const N: usize = 10_000;
+
+fn ctx() -> EmucxlContext {
+    EmucxlContext::init(EmucxlConfig::sized(64 << 20, 256 << 20)).unwrap()
+}
+
+fn main() {
+    for &size in &[16usize, 64, 256, 1024] {
+        section(&format!("{size}-byte objects, {N} alloc+free"));
+        bench_ops(&format!("raw emucxl_alloc {size}B"), (2 * N) as u64, 1, 5, || {
+            let mut c = ctx();
+            let addrs: Vec<_> = (0..N).map(|_| c.alloc(size, NODE_LOCAL).unwrap()).collect();
+            for a in addrs {
+                c.free(a).unwrap();
+            }
+        });
+        bench_ops(&format!("slab alloc {size}B"), (2 * N) as u64, 1, 5, || {
+            let mut c = ctx();
+            let mut s = SlabAllocator::new();
+            let addrs: Vec<_> =
+                (0..N).map(|_| s.alloc(&mut c, size, NODE_LOCAL).unwrap()).collect();
+            for a in addrs {
+                s.free(&mut c, a).unwrap();
+            }
+        });
+    }
+
+    section("mixed-size churn (pathological fragmentation input)");
+    bench_ops("slab churn mixed sizes", (2 * N) as u64, 1, 5, || {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let mut rng = Rng::new(3);
+        let mut live = Vec::new();
+        for _ in 0..N {
+            if rng.chance(0.55) || live.is_empty() {
+                let size = 1 + rng.index(2048);
+                let node = if rng.chance(0.5) { NODE_LOCAL } else { NODE_REMOTE };
+                live.push(s.alloc(&mut c, size, node).unwrap());
+            } else {
+                let i = rng.index(live.len());
+                let a = live.swap_remove(i);
+                s.free(&mut c, a).unwrap();
+            }
+        }
+        for a in live {
+            s.free(&mut c, a).unwrap();
+        }
+    });
+
+    // Report the memory-amplification advantage (the slab's actual win).
+    let mut c = ctx();
+    let mut s = SlabAllocator::new();
+    for _ in 0..N {
+        s.alloc(&mut c, 64, NODE_LOCAL).unwrap();
+    }
+    let slab_pages = c.stats(NODE_LOCAL).unwrap().page_bytes;
+    let mut c2 = ctx();
+    let mut raw = Vec::new();
+    for _ in 0..N {
+        raw.push(c2.alloc(64, NODE_LOCAL).unwrap());
+    }
+    let raw_pages = c2.stats(NODE_LOCAL).unwrap().page_bytes;
+    println!(
+        "\npage footprint for {N} x 64B objects: raw={} KiB, slab={} KiB ({:.0}x less memory)",
+        raw_pages / 1024,
+        slab_pages / 1024,
+        raw_pages as f64 / slab_pages as f64
+    );
+}

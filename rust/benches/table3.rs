@@ -1,0 +1,35 @@
+//! Bench: regenerates **Table III** of the paper (queue enqueue/dequeue on
+//! local vs remote memory, 15 000 ops) and reports per-op costs.
+//!
+//! Run: `cargo bench --bench table3`
+
+mod common;
+
+use common::{bench_ops, section};
+use emucxl::api::EmucxlContext;
+use emucxl::config::EmucxlConfig;
+use emucxl::experiments::{format_table3, run_table3, Table3Params};
+use emucxl::middleware::queue::{EmucxlQueue, QueuePolicy};
+
+fn main() {
+    section("Table III reproduction (paper numbers inline)");
+    let rows = run_table3(Table3Params { trials: 5, ..Default::default() }).unwrap();
+    print!("{}", format_table3(&rows));
+
+    section("per-op emulator cost (wall clock)");
+    for (policy, name) in
+        [(QueuePolicy::AllLocal, "enqueue+dequeue local"), (QueuePolicy::AllRemote, "enqueue+dequeue remote")]
+    {
+        bench_ops(name, 2_000, 1, 5, || {
+            let mut ctx =
+                EmucxlContext::init(EmucxlConfig::sized(8 << 20, 32 << 20)).unwrap();
+            let mut q = EmucxlQueue::new(policy);
+            for i in 0..1000 {
+                q.enqueue(&mut ctx, i).unwrap();
+            }
+            for _ in 0..1000 {
+                q.dequeue(&mut ctx).unwrap();
+            }
+        });
+    }
+}

@@ -1,0 +1,55 @@
+//! Bench: regenerates **Table IV** of the paper (KV GET policies under
+//! hot-set skew) plus per-op GET costs for local vs remote hits.
+//!
+//! Run: `cargo bench --bench table4`
+//! (Full 50k-GET sweep; pass a smaller count as the first arg for a quick
+//! run, e.g. `cargo bench --bench table4 -- 5000`.)
+
+mod common;
+
+use common::{bench_ops, section};
+use emucxl::api::EmucxlContext;
+use emucxl::config::EmucxlConfig;
+use emucxl::experiments::{format_table4, run_table4, Table4Params};
+use emucxl::middleware::kv::{GetPolicy, KvStore};
+
+fn main() {
+    let gets: usize = std::env::args()
+        .skip_while(|a| a != "--")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50_000);
+
+    section("Table IV reproduction (paper numbers inline)");
+    let rows = run_table4(Table4Params { gets, ..Default::default() }).unwrap();
+    print!("{}", format_table4(&rows));
+
+    section("per-op GET cost by tier (wall clock)");
+    // store with 1 local slot: "hot" stays local, "cold" stays remote
+    let mut ctx = EmucxlContext::init(EmucxlConfig::sized(8 << 20, 32 << 20)).unwrap();
+    let mut kv = KvStore::new(1, GetPolicy::InPlace);
+    kv.put(&mut ctx, b"cold", &[1u8; 256]).unwrap();
+    kv.put(&mut ctx, b"hot", &[2u8; 256]).unwrap(); // evicts "cold"
+    bench_ops("GET local hit", 1_000, 2, 10, || {
+        for _ in 0..1000 {
+            common::black_box(kv.get(&mut ctx, b"hot").unwrap());
+        }
+    });
+    bench_ops("GET remote hit (Policy2, in place)", 1_000, 2, 10, || {
+        for _ in 0..1000 {
+            common::black_box(kv.get(&mut ctx, b"cold").unwrap());
+        }
+    });
+
+    section("promotion cost (Policy1 worst case: every GET migrates)");
+    let mut ctx = EmucxlContext::init(EmucxlConfig::sized(8 << 20, 32 << 20)).unwrap();
+    let mut kv = KvStore::new(1, GetPolicy::Promote);
+    kv.put(&mut ctx, b"a", &[1u8; 256]).unwrap();
+    kv.put(&mut ctx, b"b", &[2u8; 256]).unwrap();
+    bench_ops("GET alternating promote (a/b thrash)", 1_000, 2, 10, || {
+        for i in 0..1000 {
+            let k: &[u8] = if i % 2 == 0 { b"a" } else { b"b" };
+            common::black_box(kv.get(&mut ctx, k).unwrap());
+        }
+    });
+}

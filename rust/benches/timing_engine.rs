@@ -1,0 +1,76 @@
+//! Ablation A1: timing-engine pricing paths.
+//!
+//! Compares (a) native scalar pricing, (b) native batch, (c) the XLA
+//! artifact batch path (the AOT Pallas kernel through PJRT), including the
+//! batching amortization sweep that justifies the coordinator's dynamic
+//! batcher.
+//!
+//! Run: `make artifacts && cargo bench --bench timing_engine`
+
+mod common;
+
+use common::{bench_ops, black_box, section};
+use emucxl::runtime::XlaRuntime;
+use emucxl::timing::desc::{AccessDesc, Op};
+use emucxl::timing::model::TimingParams;
+use emucxl::util::rng::Rng;
+
+fn descs(n: usize, seed: u64) -> Vec<AccessDesc> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| AccessDesc {
+            op: if rng.chance(0.3) { Op::Write } else { Op::Read },
+            node: rng.index(2) as u32,
+            bytes: [64u64, 256, 4096, 65536][rng.index(4)],
+            qdepth: rng.index(64) as f32,
+        })
+        .collect()
+}
+
+fn main() {
+    let params = TimingParams::default();
+    let batch = descs(4096, 1);
+
+    section("native pricing");
+    bench_ops("native scalar latency_ns", 4096, 3, 10, || {
+        for d in &batch {
+            black_box(params.latency_ns(d));
+        }
+    });
+    bench_ops("native batch latency_batch", 4096, 3, 10, || {
+        black_box(params.latency_batch(&batch));
+    });
+
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = match XlaRuntime::open(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("(XLA section skipped: {e})");
+            return;
+        }
+    };
+    let exec = rt.latency_batch().unwrap();
+    let b = exec.batch();
+
+    section(format!("XLA artifact path (batch={b})").as_str());
+    let full: Vec<[f32; 4]> = batch[..b].iter().map(|d| d.encode()).collect();
+    bench_ops("xla full batch (per desc)", b as u64, 3, 10, || {
+        black_box(exec.run_raw(&full, &params).unwrap());
+    });
+
+    section("batching amortization (descs per artifact call)");
+    for chunk in [1usize, 8, 32, 128, b] {
+        let descs = &batch[..chunk];
+        bench_ops(&format!("xla run with {chunk} live descs"), chunk as u64, 2, 8, || {
+            black_box(exec.run(descs, &params).unwrap());
+        });
+    }
+
+    section("window model (scan over W batches)");
+    let window = rt.window_model().unwrap();
+    let n = window.window() * window.batch();
+    let rows: Vec<[f32; 4]> = descs(n, 2).iter().map(|d| d.encode()).collect();
+    bench_ops("window model per desc", n as u64, 2, 8, || {
+        black_box(window.run(&rows, &params, 0.0).unwrap());
+    });
+}

@@ -1,0 +1,157 @@
+//! Allocation-metadata registry.
+//!
+//! The paper (§III): "Metadata (i.e. address, size, NUMA node) of each
+//! allocation/deallocation of emucxl library is maintained in the data
+//! structure which is utilized by emucxl_is_local, emucxl_get_numa_node,
+//! emucxl_get_size and emucxl_stats". This is that data structure.
+
+use std::collections::BTreeMap;
+
+use crate::error::{EmucxlError, Result};
+use crate::mem::vaspace::VAddr;
+
+/// Metadata of one live allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AllocMeta {
+    /// Requested size in bytes (page-rounding is a device detail).
+    pub size: usize,
+    pub node: u32,
+}
+
+/// Registry of live allocations keyed by base address.
+#[derive(Debug, Default)]
+pub struct Registry {
+    allocs: BTreeMap<u64, AllocMeta>,
+    /// Per-node byte totals (requested bytes), kept incrementally.
+    node_bytes: Vec<usize>,
+    /// Lifetime counters.
+    pub total_allocs: u64,
+    pub total_frees: u64,
+}
+
+impl Registry {
+    pub fn new(num_nodes: u32) -> Self {
+        Self {
+            allocs: BTreeMap::new(),
+            node_bytes: vec![0; num_nodes as usize],
+            total_allocs: 0,
+            total_frees: 0,
+        }
+    }
+
+    pub fn insert(&mut self, addr: VAddr, meta: AllocMeta) -> Result<()> {
+        if self.allocs.insert(addr.0, meta).is_some() {
+            return Err(EmucxlError::InvalidArgument(format!(
+                "duplicate registration of {addr}"
+            )));
+        }
+        self.node_bytes[meta.node as usize] += meta.size;
+        self.total_allocs += 1;
+        Ok(())
+    }
+
+    pub fn remove(&mut self, addr: VAddr) -> Result<AllocMeta> {
+        let meta = self.allocs.remove(&addr.0).ok_or(EmucxlError::BadAddress(addr.0))?;
+        self.node_bytes[meta.node as usize] -= meta.size;
+        self.total_frees += 1;
+        Ok(meta)
+    }
+
+    /// Metadata of the allocation with exactly this base address.
+    pub fn get(&self, addr: VAddr) -> Result<AllocMeta> {
+        self.allocs.get(&addr.0).copied().ok_or(EmucxlError::BadAddress(addr.0))
+    }
+
+    /// Find the allocation containing `addr` (interior pointers allowed).
+    pub fn containing(&self, addr: VAddr) -> Result<(VAddr, AllocMeta)> {
+        let (&base, &meta) = self
+            .allocs
+            .range(..=addr.0)
+            .next_back()
+            .ok_or(EmucxlError::BadAddress(addr.0))?;
+        if addr.0 - base >= meta.size as u64 {
+            return Err(EmucxlError::BadAddress(addr.0));
+        }
+        Ok((VAddr(base), meta))
+    }
+
+    /// Total requested bytes live on `node` (emucxl_stats).
+    pub fn bytes_on(&self, node: u32) -> usize {
+        self.node_bytes.get(node as usize).copied().unwrap_or(0)
+    }
+
+    pub fn live_allocations(&self) -> usize {
+        self.allocs.len()
+    }
+
+    /// Snapshot of all live base addresses (used by exit()).
+    pub fn addresses(&self) -> Vec<VAddr> {
+        self.allocs.keys().map(|&a| VAddr(a)).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (VAddr, &AllocMeta)> {
+        self.allocs.iter().map(|(&a, m)| (VAddr(a), m))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut r = Registry::new(2);
+        r.insert(VAddr(0x1000), AllocMeta { size: 100, node: 1 }).unwrap();
+        assert_eq!(r.get(VAddr(0x1000)).unwrap().size, 100);
+        assert_eq!(r.bytes_on(1), 100);
+        assert_eq!(r.live_allocations(), 1);
+        let m = r.remove(VAddr(0x1000)).unwrap();
+        assert_eq!(m.node, 1);
+        assert_eq!(r.bytes_on(1), 0);
+        assert_eq!(r.total_allocs, 1);
+        assert_eq!(r.total_frees, 1);
+    }
+
+    #[test]
+    fn duplicate_insert_rejected() {
+        let mut r = Registry::new(2);
+        r.insert(VAddr(0x1000), AllocMeta { size: 1, node: 0 }).unwrap();
+        assert!(r.insert(VAddr(0x1000), AllocMeta { size: 1, node: 0 }).is_err());
+    }
+
+    #[test]
+    fn containing_resolves_interior_pointers() {
+        let mut r = Registry::new(2);
+        r.insert(VAddr(0x1000), AllocMeta { size: 64, node: 0 }).unwrap();
+        let (base, meta) = r.containing(VAddr(0x1000 + 63)).unwrap();
+        assert_eq!(base, VAddr(0x1000));
+        assert_eq!(meta.size, 64);
+        assert!(r.containing(VAddr(0x1000 + 64)).is_err());
+        assert!(r.containing(VAddr(0xfff)).is_err());
+    }
+
+    #[test]
+    fn per_node_accounting() {
+        let mut r = Registry::new(2);
+        r.insert(VAddr(0x1000), AllocMeta { size: 10, node: 0 }).unwrap();
+        r.insert(VAddr(0x2000), AllocMeta { size: 20, node: 1 }).unwrap();
+        r.insert(VAddr(0x3000), AllocMeta { size: 30, node: 1 }).unwrap();
+        assert_eq!(r.bytes_on(0), 10);
+        assert_eq!(r.bytes_on(1), 50);
+        assert_eq!(r.bytes_on(9), 0);
+    }
+
+    #[test]
+    fn addresses_snapshot_sorted() {
+        let mut r = Registry::new(1);
+        r.insert(VAddr(0x3000), AllocMeta { size: 1, node: 0 }).unwrap();
+        r.insert(VAddr(0x1000), AllocMeta { size: 1, node: 0 }).unwrap();
+        assert_eq!(r.addresses(), vec![VAddr(0x1000), VAddr(0x3000)]);
+    }
+
+    #[test]
+    fn remove_unknown_rejected() {
+        let mut r = Registry::new(1);
+        assert!(matches!(r.remove(VAddr(0x42)), Err(EmucxlError::BadAddress(0x42))));
+    }
+}

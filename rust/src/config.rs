@@ -1,0 +1,105 @@
+//! Configuration of the emulated appliance — the knobs the paper exposes
+//! through the virtual-machine setup (node sizes, latency characteristics)
+//! plus this reproduction's engine options.
+
+use std::path::PathBuf;
+
+use crate::timing::engine::EngineMode;
+use crate::timing::model::TimingParams;
+use crate::topology::NumaTopology;
+
+/// Full configuration for [`crate::api::EmucxlContext::init`].
+#[derive(Debug, Clone)]
+pub struct EmucxlConfig {
+    /// Bytes of host-local DDR (node 0).
+    pub local_bytes: usize,
+    /// Bytes of CXL-remote memory (node 1).
+    pub remote_bytes: usize,
+    /// Emulated page size.
+    pub page_size: usize,
+    /// Timing-model calibration.
+    pub params: TimingParams,
+    /// Batch pricing path (native or XLA artifact).
+    pub engine_mode: EngineMode,
+    /// Artifact directory; required when `engine_mode == Xla`.
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for EmucxlConfig {
+    /// 64 MiB local / 256 MiB remote — big enough for every example and
+    /// bench in this repo, small enough to boot instantly. The 1:4 shape
+    /// mirrors memory-pooling deployments (POND) where the pool dwarfs
+    /// node-local DRAM.
+    fn default() -> Self {
+        Self {
+            local_bytes: 64 << 20,
+            remote_bytes: 256 << 20,
+            page_size: 4096,
+            params: TimingParams::default(),
+            engine_mode: EngineMode::Native,
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl EmucxlConfig {
+    /// Sized appliance with default timing.
+    pub fn sized(local_bytes: usize, remote_bytes: usize) -> Self {
+        Self { local_bytes, remote_bytes, ..Self::default() }
+    }
+
+    /// Enable the XLA batch-pricing path with artifacts from `dir`.
+    pub fn with_artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = Some(dir.into());
+        self.engine_mode = EngineMode::Xla;
+        self
+    }
+
+    pub fn with_params(mut self, params: TimingParams) -> Self {
+        self.params = params;
+        self
+    }
+
+    pub fn with_page_size(mut self, page_size: usize) -> Self {
+        self.page_size = page_size;
+        self
+    }
+
+    /// The two-node topology this config describes.
+    pub fn topology(&self) -> NumaTopology {
+        NumaTopology::two_node_appliance(self.local_bytes, self.remote_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_reasonable() {
+        let c = EmucxlConfig::default();
+        assert_eq!(c.local_bytes, 64 << 20);
+        assert_eq!(c.remote_bytes, 256 << 20);
+        assert_eq!(c.page_size, 4096);
+        assert_eq!(c.engine_mode, EngineMode::Native);
+        assert!(c.artifacts_dir.is_none());
+    }
+
+    #[test]
+    fn builders_compose() {
+        let c = EmucxlConfig::sized(1 << 20, 2 << 20)
+            .with_page_size(8192)
+            .with_artifacts("artifacts");
+        assert_eq!(c.page_size, 8192);
+        assert_eq!(c.engine_mode, EngineMode::Xla);
+        assert_eq!(c.artifacts_dir.as_ref().unwrap().to_str().unwrap(), "artifacts");
+    }
+
+    #[test]
+    fn topology_matches_sizes() {
+        let c = EmucxlConfig::sized(1 << 20, 2 << 20);
+        let t = c.topology();
+        assert_eq!(t.node(0).unwrap().capacity, 1 << 20);
+        assert_eq!(t.node(1).unwrap().capacity, 2 << 20);
+    }
+}

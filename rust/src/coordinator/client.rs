@@ -1,0 +1,154 @@
+//! Blocking client for the pool coordinator — the library a tenant process
+//! links against. One method per wire request; `Error` responses map back
+//! onto [`EmucxlError::Protocol`] (quota errors keep their message).
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpStream};
+
+use crate::coordinator::proto::{read_frame, write_frame, Request, Response};
+use crate::error::{EmucxlError, Result};
+
+/// A connected tenant.
+pub struct PoolClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    tenant: u32,
+}
+
+impl std::fmt::Debug for PoolClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolClient").field("tenant", &self.tenant).finish()
+    }
+}
+
+impl PoolClient {
+    /// Connect and register with a byte quota.
+    pub fn connect(addr: SocketAddr, quota: u64) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        let mut c = Self { reader, writer, tenant: 0 };
+        match c.call(Request::Hello { quota })? {
+            Response::Welcome { tenant } => {
+                c.tenant = tenant;
+                Ok(c)
+            }
+            other => Err(EmucxlError::Protocol(format!("expected Welcome, got {other:?}"))),
+        }
+    }
+
+    pub fn tenant_id(&self) -> u32 {
+        self.tenant
+    }
+
+    fn call(&mut self, req: Request) -> Result<Response> {
+        write_frame(&mut self.writer, &req.encode())?;
+        let frame = read_frame(&mut self.reader)?
+            .ok_or_else(|| EmucxlError::Protocol("server closed connection".into()))?;
+        let resp = Response::decode(&frame)?;
+        if let Response::Error { msg } = &resp {
+            return Err(EmucxlError::Protocol(msg.clone()));
+        }
+        Ok(resp)
+    }
+
+    /// Remote `emucxl_alloc`; returns (addr, priced latency).
+    pub fn alloc(&mut self, size: u64, node: u32) -> Result<(u64, f32)> {
+        match self.call(Request::Alloc { size, node })? {
+            Response::Addr { addr, lat_ns } => Ok((addr, lat_ns)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Remote `emucxl_free`.
+    pub fn free(&mut self, addr: u64) -> Result<f32> {
+        match self.call(Request::Free { addr })? {
+            Response::Ok { lat_ns } => Ok(lat_ns),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Remote `emucxl_read`.
+    pub fn read(&mut self, addr: u64, len: u32) -> Result<(Vec<u8>, f32)> {
+        match self.call(Request::Read { addr, len })? {
+            Response::Data { data, lat_ns } => Ok((data, lat_ns)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Remote `emucxl_write`.
+    pub fn write(&mut self, addr: u64, data: &[u8]) -> Result<f32> {
+        match self.call(Request::Write { addr, data: data.to_vec() })? {
+            Response::Ok { lat_ns } => Ok(lat_ns),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Remote `emucxl_migrate`; returns (new addr, priced latency).
+    pub fn migrate(&mut self, addr: u64, node: u32) -> Result<(u64, f32)> {
+        match self.call(Request::Migrate { addr, node })? {
+            Response::Addr { addr, lat_ns } => Ok((addr, lat_ns)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Remote `emucxl_is_local`.
+    pub fn is_local(&mut self, addr: u64) -> Result<bool> {
+        match self.call(Request::IsLocal { addr })? {
+            Response::Bool { value } => Ok(value),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Remote `emucxl_stats`: (allocated, page_bytes, capacity).
+    pub fn stats(&mut self, node: u32) -> Result<(u64, u64, u64)> {
+        match self.call(Request::Stats { node })? {
+            Response::Stats { allocated, page_bytes, capacity } => {
+                Ok((allocated, page_bytes, capacity))
+            }
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Shared KV store PUT.
+    pub fn kv_put(&mut self, key: &[u8], value: &[u8]) -> Result<f32> {
+        match self.call(Request::KvPut { key: key.to_vec(), value: value.to_vec() })? {
+            Response::Ok { lat_ns } => Ok(lat_ns),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Shared KV store GET; `None` on miss.
+    pub fn kv_get(&mut self, key: &[u8]) -> Result<(Option<Vec<u8>>, f32)> {
+        match self.call(Request::KvGet { key: key.to_vec() })? {
+            Response::Value { value, lat_ns } => Ok((value, lat_ns)),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Shared KV store DELETE; returns whether the key existed.
+    pub fn kv_delete(&mut self, key: &[u8]) -> Result<bool> {
+        match self.call(Request::KvDelete { key: key.to_vec() })? {
+            Response::Ok { .. } => Ok(true),
+            Response::Value { value: None, .. } => Ok(false),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// Graceful disconnect (also happens implicitly on drop/EOF).
+    pub fn bye(mut self) -> Result<()> {
+        let _ = self.call(Request::Bye)?;
+        Ok(())
+    }
+}
+
+fn unexpected(r: Response) -> EmucxlError {
+    EmucxlError::Protocol(format!("unexpected response {r:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end client/server tests live in rust/tests/coordinator.rs —
+    // they need a running server. Pure encode-path tests are in proto.rs.
+}

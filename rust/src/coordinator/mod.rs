@@ -1,0 +1,6 @@
+//! Multi-process pool coordinator (paper §VI future work).
+pub mod batcher;
+pub mod client;
+pub mod proto;
+pub mod server;
+pub mod tenant;

@@ -1,0 +1,349 @@
+//! Wire protocol of the pool coordinator.
+//!
+//! Length-prefixed binary frames over a byte stream: `u32 LE frame length`
+//! followed by `tag u8` + fields. Integers are little-endian; byte strings
+//! are `u32 len + raw`. Hand-rolled (no serde in the vendored crate set),
+//! with exhaustive encode/decode round-trip tests.
+
+use std::io::{Read, Write};
+
+use crate::error::{EmucxlError, Result};
+
+/// Maximum frame size accepted (guards the server against corrupt lengths).
+pub const MAX_FRAME: u32 = 16 << 20;
+
+/// Client -> coordinator requests.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    /// Register a tenant with a memory quota (bytes).
+    Hello { quota: u64 },
+    /// emucxl_alloc on the shared pool.
+    Alloc { size: u64, node: u32 },
+    /// emucxl_free.
+    Free { addr: u64 },
+    /// emucxl_read.
+    Read { addr: u64, len: u32 },
+    /// emucxl_write.
+    Write { addr: u64, data: Vec<u8> },
+    /// emucxl_migrate.
+    Migrate { addr: u64, node: u32 },
+    /// emucxl_is_local.
+    IsLocal { addr: u64 },
+    /// emucxl_stats.
+    Stats { node: u32 },
+    /// Shared KV store: put.
+    KvPut { key: Vec<u8>, value: Vec<u8> },
+    /// Shared KV store: get.
+    KvGet { key: Vec<u8> },
+    /// Shared KV store: delete.
+    KvDelete { key: Vec<u8> },
+    /// Graceful disconnect.
+    Bye,
+}
+
+/// Coordinator -> client responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Welcome { tenant: u32 },
+    /// Address result (alloc/migrate) + priced virtual latency.
+    Addr { addr: u64, lat_ns: f32 },
+    /// Generic success + priced virtual latency.
+    Ok { lat_ns: f32 },
+    /// Read result.
+    Data { data: Vec<u8>, lat_ns: f32 },
+    /// Optional value (KV get; `None` encodes a miss).
+    Value { value: Option<Vec<u8>>, lat_ns: f32 },
+    Bool { value: bool },
+    Stats { allocated: u64, page_bytes: u64, capacity: u64 },
+    Error { msg: String },
+}
+
+// ---------------------------------------------------------------------------
+// encoding helpers
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(tag: u8) -> Self {
+        Self { buf: vec![tag] }
+    }
+
+    fn u8(mut self, v: u8) -> Self {
+        self.buf.push(v);
+        self
+    }
+
+    fn u32(mut self, v: u32) -> Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    fn u64(mut self, v: u64) -> Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    fn f32(mut self, v: f32) -> Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    fn bytes(mut self, v: &[u8]) -> Self {
+        self.buf.extend_from_slice(&(v.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    fn done(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(EmucxlError::Protocol("truncated frame".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(EmucxlError::Protocol("trailing bytes in frame".into()))
+        }
+    }
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Request::Hello { quota } => Enc::new(1).u64(*quota).done(),
+            Request::Alloc { size, node } => Enc::new(2).u64(*size).u32(*node).done(),
+            Request::Free { addr } => Enc::new(3).u64(*addr).done(),
+            Request::Read { addr, len } => Enc::new(4).u64(*addr).u32(*len).done(),
+            Request::Write { addr, data } => Enc::new(5).u64(*addr).bytes(data).done(),
+            Request::Migrate { addr, node } => Enc::new(6).u64(*addr).u32(*node).done(),
+            Request::IsLocal { addr } => Enc::new(7).u64(*addr).done(),
+            Request::Stats { node } => Enc::new(8).u32(*node).done(),
+            Request::KvPut { key, value } => Enc::new(9).bytes(key).bytes(value).done(),
+            Request::KvGet { key } => Enc::new(10).bytes(key).done(),
+            Request::KvDelete { key } => Enc::new(11).bytes(key).done(),
+            Request::Bye => Enc::new(12).done(),
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut d = Dec::new(buf);
+        let tag = d.u8()?;
+        let req = match tag {
+            1 => Request::Hello { quota: d.u64()? },
+            2 => Request::Alloc { size: d.u64()?, node: d.u32()? },
+            3 => Request::Free { addr: d.u64()? },
+            4 => Request::Read { addr: d.u64()?, len: d.u32()? },
+            5 => Request::Write { addr: d.u64()?, data: d.bytes()? },
+            6 => Request::Migrate { addr: d.u64()?, node: d.u32()? },
+            7 => Request::IsLocal { addr: d.u64()? },
+            8 => Request::Stats { node: d.u32()? },
+            9 => Request::KvPut { key: d.bytes()?, value: d.bytes()? },
+            10 => Request::KvGet { key: d.bytes()? },
+            11 => Request::KvDelete { key: d.bytes()? },
+            12 => Request::Bye,
+            t => return Err(EmucxlError::Protocol(format!("bad request tag {t}"))),
+        };
+        d.finish()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Response::Welcome { tenant } => Enc::new(1).u32(*tenant).done(),
+            Response::Addr { addr, lat_ns } => Enc::new(2).u64(*addr).f32(*lat_ns).done(),
+            Response::Ok { lat_ns } => Enc::new(3).f32(*lat_ns).done(),
+            Response::Data { data, lat_ns } => Enc::new(4).bytes(data).f32(*lat_ns).done(),
+            Response::Value { value, lat_ns } => match value {
+                Some(v) => Enc::new(5).u8(1).bytes(v).f32(*lat_ns).done(),
+                None => Enc::new(5).u8(0).f32(*lat_ns).done(),
+            },
+            Response::Bool { value } => Enc::new(6).u8(*value as u8).done(),
+            Response::Stats { allocated, page_bytes, capacity } => {
+                Enc::new(7).u64(*allocated).u64(*page_bytes).u64(*capacity).done()
+            }
+            Response::Error { msg } => Enc::new(8).bytes(msg.as_bytes()).done(),
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut d = Dec::new(buf);
+        let tag = d.u8()?;
+        let resp = match tag {
+            1 => Response::Welcome { tenant: d.u32()? },
+            2 => Response::Addr { addr: d.u64()?, lat_ns: d.f32()? },
+            3 => Response::Ok { lat_ns: d.f32()? },
+            4 => Response::Data { data: d.bytes()?, lat_ns: d.f32()? },
+            5 => {
+                let present = d.u8()? != 0;
+                let value = if present { Some(d.bytes()?) } else { None };
+                Response::Value { value, lat_ns: d.f32()? }
+            }
+            6 => Response::Bool { value: d.u8()? != 0 },
+            7 => Response::Stats {
+                allocated: d.u64()?,
+                page_bytes: d.u64()?,
+                capacity: d.u64()?,
+            },
+            8 => Response::Error {
+                msg: String::from_utf8_lossy(&d.bytes()?).into_owned(),
+            },
+            t => return Err(EmucxlError::Protocol(format!("bad response tag {t}"))),
+        };
+        d.finish()?;
+        Ok(resp)
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    let len = payload.len() as u32;
+    if len > MAX_FRAME {
+        return Err(EmucxlError::Protocol(format!("frame too large: {len}")));
+    }
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. Returns `None` on clean EOF.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len > MAX_FRAME {
+        return Err(EmucxlError::Protocol(format!("frame too large: {len}")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: Request) {
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    }
+
+    fn roundtrip_resp(r: Response) {
+        assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn all_requests_roundtrip() {
+        roundtrip_req(Request::Hello { quota: u64::MAX });
+        roundtrip_req(Request::Alloc { size: 4096, node: 1 });
+        roundtrip_req(Request::Free { addr: 0x7f00_0000_0000 });
+        roundtrip_req(Request::Read { addr: 1, len: 2 });
+        roundtrip_req(Request::Write { addr: 3, data: vec![1, 2, 3] });
+        roundtrip_req(Request::Migrate { addr: 9, node: 0 });
+        roundtrip_req(Request::IsLocal { addr: 5 });
+        roundtrip_req(Request::Stats { node: 1 });
+        roundtrip_req(Request::KvPut { key: b"k".to_vec(), value: vec![0; 1000] });
+        roundtrip_req(Request::KvGet { key: vec![] });
+        roundtrip_req(Request::KvDelete { key: b"x".to_vec() });
+        roundtrip_req(Request::Bye);
+    }
+
+    #[test]
+    fn all_responses_roundtrip() {
+        roundtrip_resp(Response::Welcome { tenant: 7 });
+        roundtrip_resp(Response::Addr { addr: 42, lat_ns: 253.5 });
+        roundtrip_resp(Response::Ok { lat_ns: 0.0 });
+        roundtrip_resp(Response::Data { data: vec![9; 77], lat_ns: 1.0 });
+        roundtrip_resp(Response::Value { value: Some(vec![1]), lat_ns: 2.0 });
+        roundtrip_resp(Response::Value { value: None, lat_ns: 2.0 });
+        roundtrip_resp(Response::Bool { value: true });
+        roundtrip_resp(Response::Stats { allocated: 1, page_bytes: 2, capacity: 3 });
+        roundtrip_resp(Response::Error { msg: "quota exceeded".into() });
+    }
+
+    #[test]
+    fn bad_tag_rejected() {
+        assert!(Request::decode(&[99]).is_err());
+        assert!(Response::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut buf = Request::Bye.encode();
+        buf.push(0);
+        assert!(Request::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn truncated_frame_rejected() {
+        let buf = Request::Alloc { size: 4096, node: 1 }.encode();
+        assert!(Request::decode(&buf[..buf.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn frame_io_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+}

@@ -1,0 +1,431 @@
+//! The pool coordinator daemon.
+//!
+//! Implements the paper's §VI future work: "support for management
+//! operations across multiple processes and disaggregated memory". One
+//! process owns the emulated appliance; any number of client processes
+//! connect over TCP, register as tenants with a byte quota, and drive the
+//! emucxl API plus a shared key-value store through the wire protocol.
+//!
+//! Threading model: thread-per-connection for request handling (requests
+//! mutate the shared pool under one mutex — the pool *is* one machine's
+//! memory), with latency pricing pushed OUT of the lock onto the dynamic
+//! [`TimingBatcher`], which batches concurrent tenants' descriptors into
+//! single XLA artifact executions.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::api::{EmucxlContext, NODE_LOCAL};
+use crate::config::EmucxlConfig;
+use crate::coordinator::batcher::TimingBatcher;
+use crate::coordinator::proto::{read_frame, write_frame, Request, Response};
+use crate::coordinator::tenant::TenantTable;
+use crate::error::{EmucxlError, Result};
+use crate::mem::vaspace::VAddr;
+use crate::middleware::kv::{GetPolicy, KvStore};
+use crate::timing::desc::AccessDesc;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    pub emucxl: EmucxlConfig,
+    /// Local-object capacity of the shared KV store.
+    pub kv_local_capacity: usize,
+    pub kv_policy: GetPolicy,
+    /// Batch threshold of the timing batcher.
+    pub batch: usize,
+    /// Max time a descriptor waits for its batch to fill.
+    pub max_wait: Duration,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self {
+            emucxl: EmucxlConfig::default(),
+            kv_local_capacity: 300,
+            kv_policy: GetPolicy::Promote,
+            batch: 64,
+            max_wait: Duration::from_micros(200),
+        }
+    }
+}
+
+struct PoolState {
+    ctx: EmucxlContext,
+    kv: KvStore,
+    tenants: TenantTable,
+}
+
+struct SharedPool {
+    state: Mutex<PoolState>,
+    batcher: TimingBatcher,
+    stop: AtomicBool,
+}
+
+/// Running coordinator handle; shuts down on [`PoolServer::shutdown`] or drop.
+pub struct PoolServer {
+    addr: SocketAddr,
+    shared: Arc<SharedPool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PoolServer {
+    /// Bind to `127.0.0.1:port` (0 = ephemeral) and start serving.
+    pub fn start(config: PoolConfig, port: u16) -> Result<Self> {
+        // The batcher gets the artifact dir; the context prices natively
+        // (identical math, cross-checked by tests) so correctness ops never
+        // block on the batch path.
+        let artifacts = config.emucxl.artifacts_dir.clone();
+        let mut emucxl_cfg = config.emucxl.clone();
+        emucxl_cfg.engine_mode = crate::timing::engine::EngineMode::Native;
+        emucxl_cfg.artifacts_dir = None;
+
+        let state = PoolState {
+            ctx: EmucxlContext::init(emucxl_cfg)?,
+            kv: KvStore::new(config.kv_local_capacity, config.kv_policy),
+            tenants: TenantTable::new(),
+        };
+        let batcher = TimingBatcher::start(
+            artifacts,
+            config.emucxl.params,
+            config.batch,
+            config.max_wait,
+        )?;
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(SharedPool {
+            state: Mutex::new(state),
+            batcher,
+            stop: AtomicBool::new(false),
+        });
+        let s2 = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("emucxl-accept".into())
+            .spawn(move || accept_loop(listener, s2))
+            .expect("spawn accept loop");
+        Ok(Self { addr, shared, accept: Some(accept) })
+    }
+
+    /// Address clients should connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Number of connected tenants.
+    pub fn tenant_count(&self) -> usize {
+        self.shared.state.lock().unwrap().tenants.len()
+    }
+
+    /// Batcher statistics: (flushes, descriptors priced).
+    pub fn batcher_stats(&self) -> (u64, u64) {
+        self.shared.batcher.stats()
+    }
+
+    /// Virtual time of the pool.
+    pub fn now_ns(&self) -> u64 {
+        self.shared.state.lock().unwrap().ctx.now_ns()
+    }
+
+    /// Stop accepting and join the accept thread.
+    pub fn shutdown(&mut self) {
+        if self.shared.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept() call.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PoolServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<SharedPool>) {
+    let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    for stream in listener.incoming() {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let s2 = Arc::clone(&shared);
+        handlers.push(
+            std::thread::Builder::new()
+                .name("emucxl-conn".into())
+                .spawn(move || {
+                    let _ = serve_connection(stream, s2);
+                })
+                .expect("spawn connection handler"),
+        );
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn err_resp(e: &EmucxlError) -> Response {
+    Response::Error { msg: e.to_string() }
+}
+
+fn node_flag(node: u32) -> u32 {
+    if node == NODE_LOCAL {
+        0
+    } else {
+        1
+    }
+}
+
+fn serve_connection(stream: TcpStream, shared: Arc<SharedPool>) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut tenant_id: Option<u32> = None;
+
+    loop {
+        let frame = match read_frame(&mut reader)? {
+            Some(f) => f,
+            None => break, // client hung up
+        };
+        let req = Request::decode(&frame)?;
+        if matches!(req, Request::Bye) {
+            write_frame(&mut writer, &Response::Ok { lat_ns: 0.0 }.encode())?;
+            break;
+        }
+        let resp = handle_request(&shared, &mut tenant_id, req);
+        write_frame(&mut writer, &resp.encode())?;
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+
+    // Disconnect: reclaim everything the tenant still owns.
+    if let Some(id) = tenant_id {
+        let mut st = shared.state.lock().unwrap();
+        if let Some(tenant) = st.tenants.remove(id) {
+            for addr in tenant.owned_addrs() {
+                let _ = st.ctx.free(VAddr(addr));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_request(
+    shared: &Arc<SharedPool>,
+    tenant_id: &mut Option<u32>,
+    req: Request,
+) -> Response {
+    // Hello is the only request valid before registration.
+    if tenant_id.is_none() && !matches!(req, Request::Hello { .. }) {
+        return Response::Error { msg: "not registered: send Hello first".into() };
+    }
+    match req {
+        Request::Hello { quota } => {
+            let mut st = shared.state.lock().unwrap();
+            let id = st.tenants.register(quota as usize);
+            *tenant_id = Some(id);
+            Response::Welcome { tenant: id }
+        }
+        Request::Alloc { size, node } => {
+            let id = tenant_id.unwrap();
+            let addr = {
+                let mut st = shared.state.lock().unwrap();
+                match st.tenants.get_mut(id).and_then(|t| {
+                    // admission first: don't touch the pool if over quota
+                    if t.headroom() < size as usize {
+                        Err(EmucxlError::QuotaExceeded {
+                            tenant: id,
+                            requested: size as usize,
+                            quota: t.quota,
+                        })
+                    } else {
+                        Ok(())
+                    }
+                }) {
+                    Ok(()) => {}
+                    Err(e) => return err_resp(&e),
+                }
+                let addr = match st.ctx.alloc(size as usize, node) {
+                    Ok(a) => a,
+                    Err(e) => return err_resp(&e),
+                };
+                if let Err(e) =
+                    st.tenants.get_mut(id).and_then(|t| t.charge(addr.0, size as usize))
+                {
+                    let _ = st.ctx.free(addr);
+                    return err_resp(&e);
+                }
+                addr
+            };
+            // Price the configuration op outside the lock, on the batcher.
+            let lat = shared.batcher.price(AccessDesc::mmio());
+            Response::Addr { addr: addr.0, lat_ns: lat }
+        }
+        Request::Free { addr } => {
+            let id = tenant_id.unwrap();
+            {
+                let mut st = shared.state.lock().unwrap();
+                match st.tenants.get_mut(id).and_then(|t| {
+                    if t.owns(addr) {
+                        Ok(())
+                    } else {
+                        Err(EmucxlError::BadAddress(addr))
+                    }
+                }) {
+                    Ok(()) => {}
+                    Err(e) => return err_resp(&e),
+                }
+                if let Err(e) = st.ctx.free(VAddr(addr)) {
+                    return err_resp(&e);
+                }
+                let _ = st.tenants.get_mut(id).and_then(|t| t.credit(addr));
+            }
+            let lat = shared.batcher.price(AccessDesc::mmio());
+            Response::Ok { lat_ns: lat }
+        }
+        Request::Read { addr, len } => {
+            let (data, node) = {
+                let mut st = shared.state.lock().unwrap();
+                let node = match st.ctx.get_numa_node(VAddr(addr)) {
+                    Ok(n) => n,
+                    Err(e) => return err_resp(&e),
+                };
+                let mut buf = vec![0u8; len as usize];
+                if let Err(e) = st.ctx.read(VAddr(addr), &mut buf) {
+                    return err_resp(&e);
+                }
+                (buf, node)
+            };
+            let lat =
+                shared.batcher.price(AccessDesc::read(node_flag(node), len as u64));
+            Response::Data { data, lat_ns: lat }
+        }
+        Request::Write { addr, data } => {
+            let node = {
+                let mut st = shared.state.lock().unwrap();
+                let node = match st.ctx.get_numa_node(VAddr(addr)) {
+                    Ok(n) => n,
+                    Err(e) => return err_resp(&e),
+                };
+                if let Err(e) = st.ctx.write(VAddr(addr), &data) {
+                    return err_resp(&e);
+                }
+                node
+            };
+            let lat = shared
+                .batcher
+                .price(AccessDesc::write(node_flag(node), data.len() as u64));
+            Response::Ok { lat_ns: lat }
+        }
+        Request::Migrate { addr, node } => {
+            let id = tenant_id.unwrap();
+            let (new_addr, size, src_node) = {
+                let mut st = shared.state.lock().unwrap();
+                match st.tenants.get_mut(id).and_then(|t| {
+                    if t.owns(addr) {
+                        Ok(())
+                    } else {
+                        Err(EmucxlError::BadAddress(addr))
+                    }
+                }) {
+                    Ok(()) => {}
+                    Err(e) => return err_resp(&e),
+                }
+                let size = match st.ctx.get_size(VAddr(addr)) {
+                    Ok(s) => s,
+                    Err(e) => return err_resp(&e),
+                };
+                let src = st.ctx.get_numa_node(VAddr(addr)).unwrap_or(0);
+                let new_addr = match st.ctx.migrate(VAddr(addr), node) {
+                    Ok(a) => a,
+                    Err(e) => return err_resp(&e),
+                };
+                if new_addr.0 != addr {
+                    let _ = st.tenants.get_mut(id).and_then(|t| t.rekey(addr, new_addr.0));
+                }
+                (new_addr, size, src)
+            };
+            // migrate = read from source + write to destination
+            let lats = shared.batcher.price_many(&[
+                AccessDesc::read(node_flag(src_node), size as u64),
+                AccessDesc::write(node_flag(node), size as u64),
+            ]);
+            Response::Addr { addr: new_addr.0, lat_ns: lats.iter().sum() }
+        }
+        Request::IsLocal { addr } => {
+            let st = shared.state.lock().unwrap();
+            match st.ctx.is_local(VAddr(addr)) {
+                Ok(v) => Response::Bool { value: v },
+                Err(e) => err_resp(&e),
+            }
+        }
+        Request::Stats { node } => {
+            let st = shared.state.lock().unwrap();
+            match st.ctx.stats(node) {
+                Ok(s) => Response::Stats {
+                    allocated: s.allocated_bytes as u64,
+                    page_bytes: s.page_bytes as u64,
+                    capacity: s.capacity as u64,
+                },
+                Err(e) => err_resp(&e),
+            }
+        }
+        Request::KvPut { key, value } => {
+            let vlen = value.len();
+            {
+                let mut st = shared.state.lock().unwrap();
+                let PoolState { ctx, kv, .. } = &mut *st;
+                if let Err(e) = kv.put(ctx, &key, &value) {
+                    return err_resp(&e);
+                }
+            }
+            let lat = shared
+                .batcher
+                .price(AccessDesc::write(0, (key.len() + vlen) as u64));
+            Response::Ok { lat_ns: lat }
+        }
+        Request::KvGet { key } => {
+            let (value, remote) = {
+                let mut st = shared.state.lock().unwrap();
+                let remote = st.kv.tier_of(&key) == Some("remote");
+                let PoolState { ctx, kv, .. } = &mut *st;
+                match kv.get(ctx, &key) {
+                    Ok(v) => (v, remote),
+                    Err(e) => return err_resp(&e),
+                }
+            };
+            let len = value.as_ref().map(|v| v.len()).unwrap_or(0) as u64;
+            let lat = shared
+                .batcher
+                .price(AccessDesc::read(if remote { 1 } else { 0 }, len.max(1)));
+            Response::Value { value, lat_ns: lat }
+        }
+        Request::KvDelete { key } => {
+            let existed = {
+                let mut st = shared.state.lock().unwrap();
+                let PoolState { ctx, kv, .. } = &mut *st;
+                match kv.delete(ctx, &key) {
+                    Ok(v) => v,
+                    Err(e) => return err_resp(&e),
+                }
+            };
+            let lat = shared.batcher.price(AccessDesc::mmio());
+            if existed {
+                Response::Ok { lat_ns: lat }
+            } else {
+                Response::Value { value: None, lat_ns: lat }
+            }
+        }
+        Request::Bye => unreachable!("handled by caller"),
+    }
+}

@@ -1,0 +1,171 @@
+//! Tenant accounting for the shared pool (paper §VI: "needs further
+//! management when multiple entities access and use a shared disaggregated
+//! memory pool").
+//!
+//! Each connected client is a tenant with a byte quota. Allocations are
+//! charged against the quota; frees are credited back; ownership is
+//! tracked per address so one tenant cannot free another's memory.
+
+use std::collections::HashMap;
+
+use crate::error::{EmucxlError, Result};
+
+/// One tenant's accounting state.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    pub id: u32,
+    pub quota: usize,
+    pub used: usize,
+    /// addr -> size of each allocation owned by this tenant.
+    owned: HashMap<u64, usize>,
+}
+
+impl Tenant {
+    pub fn new(id: u32, quota: usize) -> Self {
+        Self { id, quota, used: 0, owned: HashMap::new() }
+    }
+
+    /// Admission check + charge for `size` bytes at `addr`.
+    pub fn charge(&mut self, addr: u64, size: usize) -> Result<()> {
+        if self.used + size > self.quota {
+            return Err(EmucxlError::QuotaExceeded {
+                tenant: self.id,
+                requested: size,
+                quota: self.quota,
+            });
+        }
+        self.used += size;
+        self.owned.insert(addr, size);
+        Ok(())
+    }
+
+    /// Credit back an owned allocation; errors if not owned.
+    pub fn credit(&mut self, addr: u64) -> Result<usize> {
+        let size = self
+            .owned
+            .remove(&addr)
+            .ok_or(EmucxlError::BadAddress(addr))?;
+        self.used -= size;
+        Ok(size)
+    }
+
+    /// Ownership transfer on migrate: old addr out, new addr in, same size.
+    pub fn rekey(&mut self, old: u64, new: u64) -> Result<()> {
+        let size = self.owned.remove(&old).ok_or(EmucxlError::BadAddress(old))?;
+        self.owned.insert(new, size);
+        Ok(())
+    }
+
+    pub fn owns(&self, addr: u64) -> bool {
+        self.owned.contains_key(&addr)
+    }
+
+    /// Addresses still owned (reclaimed on disconnect).
+    pub fn owned_addrs(&self) -> Vec<u64> {
+        self.owned.keys().copied().collect()
+    }
+
+    pub fn headroom(&self) -> usize {
+        self.quota - self.used
+    }
+}
+
+/// Registry of connected tenants.
+#[derive(Debug, Default)]
+pub struct TenantTable {
+    tenants: HashMap<u32, Tenant>,
+    next_id: u32,
+}
+
+impl TenantTable {
+    pub fn new() -> Self {
+        Self { tenants: HashMap::new(), next_id: 1 }
+    }
+
+    pub fn register(&mut self, quota: usize) -> u32 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.tenants.insert(id, Tenant::new(id, quota));
+        id
+    }
+
+    pub fn get_mut(&mut self, id: u32) -> Result<&mut Tenant> {
+        self.tenants
+            .get_mut(&id)
+            .ok_or_else(|| EmucxlError::Protocol(format!("unknown tenant {id}")))
+    }
+
+    pub fn remove(&mut self, id: u32) -> Option<Tenant> {
+        self.tenants.remove(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    pub fn total_used(&self) -> usize {
+        self.tenants.values().map(|t| t.used).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_and_credit() {
+        let mut t = Tenant::new(1, 1000);
+        t.charge(0x10, 600).unwrap();
+        assert_eq!(t.used, 600);
+        assert_eq!(t.headroom(), 400);
+        assert!(matches!(
+            t.charge(0x20, 500),
+            Err(EmucxlError::QuotaExceeded { tenant: 1, .. })
+        ));
+        assert_eq!(t.credit(0x10).unwrap(), 600);
+        assert_eq!(t.used, 0);
+        t.charge(0x20, 500).unwrap();
+    }
+
+    #[test]
+    fn cannot_credit_unowned() {
+        let mut t = Tenant::new(1, 100);
+        assert!(t.credit(0x99).is_err());
+    }
+
+    #[test]
+    fn rekey_preserves_usage() {
+        let mut t = Tenant::new(1, 100);
+        t.charge(0x10, 50).unwrap();
+        t.rekey(0x10, 0x20).unwrap();
+        assert!(t.owns(0x20) && !t.owns(0x10));
+        assert_eq!(t.used, 50);
+        assert_eq!(t.credit(0x20).unwrap(), 50);
+    }
+
+    #[test]
+    fn table_registration() {
+        let mut tab = TenantTable::new();
+        let a = tab.register(100);
+        let b = tab.register(200);
+        assert_ne!(a, b);
+        assert_eq!(tab.len(), 2);
+        tab.get_mut(a).unwrap().charge(0x1, 10).unwrap();
+        tab.get_mut(b).unwrap().charge(0x2, 20).unwrap();
+        assert_eq!(tab.total_used(), 30);
+        let t = tab.remove(a).unwrap();
+        assert_eq!(t.owned_addrs(), vec![0x1]);
+        assert!(tab.get_mut(a).is_err());
+    }
+
+    #[test]
+    fn exact_quota_fits() {
+        let mut t = Tenant::new(1, 100);
+        t.charge(0x1, 100).unwrap();
+        assert_eq!(t.headroom(), 0);
+    }
+}

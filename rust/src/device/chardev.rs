@@ -1,0 +1,420 @@
+//! The emulated emucxl character device.
+//!
+//! This is the Rust analog of the paper's loadable kernel module: a device
+//! you `open()`, then `mmap()` with the **NUMA node encoded in the offset
+//! argument** (the paper's trick for smuggling node affinity through the
+//! non-NUMA-aware mmap syscall), `munmap()` and `close()` (Figure 3).
+//!
+//! Behind the file interface sit the per-node arenas (`kmalloc_node`
+//! analog), the page table (`remap_pfn_range` analog) and the CXL
+//! controller model that observes every access to CXL-backed nodes.
+
+use std::collections::HashMap;
+
+use crate::device::controller::CxlController;
+use crate::error::{EmucxlError, Result};
+use crate::mem::arena::NodeArena;
+use crate::mem::pagetable::PageTable;
+use crate::mem::vaspace::{VAddr, VaSpace};
+use crate::mem::pages_for;
+use crate::topology::{MemoryKind, NumaTopology};
+
+/// A device file descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fd(pub u32);
+
+/// One live mapping, as returned by `mmap`.
+#[derive(Debug, Clone, Copy)]
+pub struct MappedRegion {
+    pub addr: VAddr,
+    pub node: u32,
+    pub len: usize,
+    pub pages: usize,
+}
+
+/// Resolution of an access against the device (who services it).
+#[derive(Debug, Clone, Copy)]
+pub struct AccessPath {
+    pub node: u32,
+    /// true when the access crosses the CXL controller.
+    pub via_cxl: bool,
+    /// queue depth observed at issue (0 for local DDR).
+    pub qdepth: f64,
+}
+
+/// The emulated device instance (one per emulated machine).
+#[derive(Debug)]
+pub struct EmucxlDevice {
+    topology: NumaTopology,
+    arenas: Vec<NodeArena>,
+    pagetable: PageTable,
+    vaspace: VaSpace,
+    controller: CxlController,
+    page_size: usize,
+    next_fd: u32,
+    open_fds: Vec<u32>,
+    /// mmap regions by base address -> owning fd, so close() can reclaim
+    /// leaks like the LKM release hook does. Keyed by address so munmap is
+    /// O(log n) — a per-free linear scan made teardown quadratic
+    /// (EXPERIMENTS.md §Perf L3-2).
+    fd_regions: HashMap<u64, u32>,
+}
+
+impl EmucxlDevice {
+    pub fn new(topology: NumaTopology, page_size: usize) -> Self {
+        let arenas = topology
+            .nodes()
+            .iter()
+            .map(|n| NodeArena::new(n.id, n.capacity, page_size))
+            .collect();
+        Self {
+            topology,
+            arenas,
+            pagetable: PageTable::new(page_size),
+            vaspace: VaSpace::new(page_size),
+            controller: CxlController::default(),
+            page_size,
+            next_fd: 3, // 0/1/2 are taken, as in a real process
+            open_fds: Vec::new(),
+            fd_regions: HashMap::new(),
+        }
+    }
+
+    pub fn topology(&self) -> &NumaTopology {
+        &self.topology
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn controller(&self) -> &CxlController {
+        &self.controller
+    }
+
+    pub fn controller_mut(&mut self) -> &mut CxlController {
+        &mut self.controller
+    }
+
+    /// `open("/dev/emucxl")` — a CXL.io configuration operation.
+    pub fn open(&mut self) -> Fd {
+        let fd = Fd(self.next_fd);
+        self.next_fd += 1;
+        self.open_fds.push(fd.0);
+        self.controller.record_io();
+        fd
+    }
+
+    fn check_fd(&self, fd: Fd) -> Result<()> {
+        if self.open_fds.contains(&fd.0) {
+            Ok(())
+        } else {
+            Err(EmucxlError::DeviceClosed)
+        }
+    }
+
+    /// `close(fd)` — releases the fd and reclaims any still-mapped regions
+    /// created through it (LKM release-hook semantics).
+    pub fn close(&mut self, fd: Fd) -> Result<usize> {
+        self.check_fd(fd)?;
+        self.open_fds.retain(|&f| f != fd.0);
+        self.controller.record_io();
+        let leaked: Vec<VAddr> = self
+            .fd_regions
+            .iter()
+            .filter(|&(_, &f)| f == fd.0)
+            .map(|(&a, _)| VAddr(a))
+            .collect();
+        let n = leaked.len();
+        for addr in leaked {
+            self.munmap(addr)?;
+        }
+        Ok(n)
+    }
+
+    pub fn open_fd_count(&self) -> usize {
+        self.open_fds.len()
+    }
+
+    /// `mmap(fd, len, offset = node)` — allocate `len` bytes of node-local
+    /// frames and map them. Node id travels in the offset argument, exactly
+    /// as in the paper's driver.
+    pub fn mmap(&mut self, fd: Fd, len: usize, node: u32) -> Result<MappedRegion> {
+        self.check_fd(fd)?;
+        if len == 0 {
+            return Err(EmucxlError::InvalidArgument("mmap of 0 bytes".into()));
+        }
+        self.topology.node(node)?;
+        let pages = pages_for(len, self.page_size);
+        let start_frame = self.arenas[node as usize].alloc_pages(pages)?;
+        let addr = match self.vaspace.alloc(len) {
+            Ok(a) => a,
+            Err(e) => {
+                self.arenas[node as usize].free_pages(start_frame, pages)?;
+                return Err(e);
+            }
+        };
+        if let Err(e) = self.pagetable.map(addr, node, start_frame, pages) {
+            self.arenas[node as usize].free_pages(start_frame, pages)?;
+            self.vaspace.free(addr, len)?;
+            return Err(e);
+        }
+        self.fd_regions.insert(addr.0, fd.0);
+        // Mapping setup is a configuration-path operation.
+        self.controller.record_io();
+        Ok(MappedRegion { addr, node, len, pages })
+    }
+
+    /// `munmap(addr)` — tear down a mapping created by [`Self::mmap`].
+    pub fn munmap(&mut self, addr: VAddr) -> Result<()> {
+        let extent = self.pagetable.unmap(addr)?;
+        self.arenas[extent.node as usize].free_pages(extent.start_frame, extent.pages)?;
+        self.vaspace.free(addr, extent.pages * self.page_size)?;
+        self.fd_regions.remove(&addr.0);
+        self.controller.record_io();
+        Ok(())
+    }
+
+    /// Which node backs `addr` (errors if unmapped).
+    pub fn node_of(&self, addr: VAddr) -> Result<u32> {
+        Ok(self.pagetable.resolve(addr)?.node)
+    }
+
+    fn classify(&mut self, node: u32, is_write: bool, bytes: usize) -> AccessPath {
+        let via_cxl = self.topology.nodes()[node as usize].kind == MemoryKind::CxlMem;
+        let qdepth = if via_cxl { self.controller.record_mem(is_write, bytes) } else { 0.0 };
+        AccessPath { node, via_cxl, qdepth }
+    }
+
+    /// Load `out.len()` bytes from `addr`. Returns the access path taken
+    /// (the timing engine turns it into latency).
+    pub fn read(&mut self, addr: VAddr, out: &mut [u8]) -> Result<AccessPath> {
+        let r = self.pagetable.resolve(addr)?;
+        if out.len() > r.remaining {
+            return Err(EmucxlError::OutOfBounds {
+                addr: addr.0,
+                len: out.len(),
+                alloc_size: r.remaining,
+            });
+        }
+        self.arenas[r.node as usize].read(r.start_frame, r.offset, out)?;
+        Ok(self.classify(r.node, false, out.len()))
+    }
+
+    /// Store `data` at `addr`.
+    pub fn write(&mut self, addr: VAddr, data: &[u8]) -> Result<AccessPath> {
+        let r = self.pagetable.resolve(addr)?;
+        if data.len() > r.remaining {
+            return Err(EmucxlError::OutOfBounds {
+                addr: addr.0,
+                len: data.len(),
+                alloc_size: r.remaining,
+            });
+        }
+        self.arenas[r.node as usize].write(r.start_frame, r.offset, data)?;
+        Ok(self.classify(r.node, true, data.len()))
+    }
+
+    /// Fill `len` bytes at `addr` with `value`.
+    pub fn fill(&mut self, addr: VAddr, len: usize, value: u8) -> Result<AccessPath> {
+        let r = self.pagetable.resolve(addr)?;
+        if len > r.remaining {
+            return Err(EmucxlError::OutOfBounds { addr: addr.0, len, alloc_size: r.remaining });
+        }
+        self.arenas[r.node as usize].fill(r.start_frame, r.offset, len, value)?;
+        Ok(self.classify(r.node, true, len))
+    }
+
+    /// Copy `len` bytes from `src` to `dst` (cross-node allowed). Returns
+    /// the (read-path, write-path) pair. Overlap-safe when src and dst are
+    /// in the same extent (memmove semantics); non-overlapping extents copy
+    /// through a bounce buffer like the CPU would.
+    pub fn copy(&mut self, dst: VAddr, src: VAddr, len: usize) -> Result<(AccessPath, AccessPath)> {
+        let rs = self.pagetable.resolve(src)?;
+        let rd = self.pagetable.resolve(dst)?;
+        if len > rs.remaining {
+            return Err(EmucxlError::OutOfBounds { addr: src.0, len, alloc_size: rs.remaining });
+        }
+        if len > rd.remaining {
+            return Err(EmucxlError::OutOfBounds { addr: dst.0, len, alloc_size: rd.remaining });
+        }
+        if rs.node == rd.node {
+            self.arenas[rs.node as usize].copy_within(
+                rs.start_frame,
+                rs.offset,
+                rd.start_frame,
+                rd.offset,
+                len,
+            )?;
+        } else {
+            let mut bounce = vec![0u8; len];
+            self.arenas[rs.node as usize].read(rs.start_frame, rs.offset, &mut bounce)?;
+            self.arenas[rd.node as usize].write(rd.start_frame, rd.offset, &bounce)?;
+        }
+        let rp = self.classify(rs.node, false, len);
+        let wp = self.classify(rd.node, true, len);
+        Ok((rp, wp))
+    }
+
+    /// Bytes currently allocated on `node` (for `emucxl_stats`).
+    pub fn allocated_on(&self, node: u32) -> Result<usize> {
+        self.topology.node(node)?;
+        Ok(self.arenas[node as usize].allocated_bytes())
+    }
+
+    /// Free bytes on `node`.
+    pub fn free_on(&self, node: u32) -> Result<usize> {
+        self.topology.node(node)?;
+        Ok(self.arenas[node as usize].free_bytes())
+    }
+
+    /// Number of live mappings.
+    pub fn mapping_count(&self) -> usize {
+        self.pagetable.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::NumaTopology;
+
+    fn dev() -> EmucxlDevice {
+        EmucxlDevice::new(NumaTopology::two_node_appliance(1 << 20, 4 << 20), 4096)
+    }
+
+    #[test]
+    fn figure3_sequence() {
+        // init -> mmap(node) -> access -> munmap -> exit, as in Figure 3.
+        let mut d = dev();
+        let fd = d.open();
+        let m = d.mmap(fd, 8192, 1).unwrap();
+        assert_eq!(m.node, 1);
+        assert_eq!(m.pages, 2);
+        let path = d.write(m.addr, b"cxl").unwrap();
+        assert!(path.via_cxl);
+        let mut out = [0u8; 3];
+        let path = d.read(m.addr, &mut out).unwrap();
+        assert!(path.via_cxl);
+        assert_eq!(&out, b"cxl");
+        d.munmap(m.addr).unwrap();
+        d.close(fd).unwrap();
+        assert_eq!(d.mapping_count(), 0);
+        assert_eq!(d.open_fd_count(), 0);
+    }
+
+    #[test]
+    fn local_access_bypasses_controller() {
+        let mut d = dev();
+        let fd = d.open();
+        let m = d.mmap(fd, 4096, 0).unwrap();
+        let before = d.controller().mem_reads.ops + d.controller().mem_writes.ops;
+        let p = d.write(m.addr, &[1, 2, 3]).unwrap();
+        assert!(!p.via_cxl);
+        let after = d.controller().mem_reads.ops + d.controller().mem_writes.ops;
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn remote_access_counts_flits() {
+        let mut d = dev();
+        let fd = d.open();
+        let m = d.mmap(fd, 4096, 1).unwrap();
+        d.write(m.addr, &vec![0u8; 4096]).unwrap();
+        assert_eq!(d.controller().mem_writes.flits, 64);
+    }
+
+    #[test]
+    fn mmap_on_closed_fd_rejected() {
+        let mut d = dev();
+        let fd = d.open();
+        d.close(fd).unwrap();
+        assert!(matches!(d.mmap(fd, 4096, 0), Err(EmucxlError::DeviceClosed)));
+    }
+
+    #[test]
+    fn invalid_node_rejected() {
+        let mut d = dev();
+        let fd = d.open();
+        assert!(matches!(
+            d.mmap(fd, 4096, 9),
+            Err(EmucxlError::InvalidNode { node: 9, .. })
+        ));
+    }
+
+    #[test]
+    fn close_reclaims_leaked_mappings() {
+        let mut d = dev();
+        let fd = d.open();
+        d.mmap(fd, 4096, 0).unwrap();
+        d.mmap(fd, 4096, 1).unwrap();
+        let reclaimed = d.close(fd).unwrap();
+        assert_eq!(reclaimed, 2);
+        assert_eq!(d.mapping_count(), 0);
+        assert_eq!(d.allocated_on(0).unwrap(), 0);
+        assert_eq!(d.allocated_on(1).unwrap(), 0);
+    }
+
+    #[test]
+    fn oom_when_node_exhausted() {
+        let mut d = EmucxlDevice::new(NumaTopology::two_node_appliance(8192, 8192), 4096);
+        let fd = d.open();
+        d.mmap(fd, 8192, 0).unwrap();
+        assert!(matches!(
+            d.mmap(fd, 4096, 0),
+            Err(EmucxlError::OutOfMemory { node: 0, .. })
+        ));
+        // remote node unaffected
+        assert!(d.mmap(fd, 4096, 1).is_ok());
+    }
+
+    #[test]
+    fn cross_node_copy_moves_bytes() {
+        let mut d = dev();
+        let fd = d.open();
+        let a = d.mmap(fd, 4096, 0).unwrap();
+        let b = d.mmap(fd, 4096, 1).unwrap();
+        d.write(a.addr, b"payload").unwrap();
+        let (rp, wp) = d.copy(b.addr, a.addr, 7).unwrap();
+        assert!(!rp.via_cxl && wp.via_cxl);
+        let mut out = [0u8; 7];
+        d.read(b.addr, &mut out).unwrap();
+        assert_eq!(&out, b"payload");
+    }
+
+    #[test]
+    fn out_of_bounds_access_rejected() {
+        let mut d = dev();
+        let fd = d.open();
+        let m = d.mmap(fd, 4096, 0).unwrap();
+        let buf = vec![0u8; 4097];
+        assert!(matches!(
+            d.write(m.addr, &buf),
+            Err(EmucxlError::OutOfBounds { .. })
+        ));
+    }
+
+    #[test]
+    fn interior_pointer_access_works() {
+        let mut d = dev();
+        let fd = d.open();
+        let m = d.mmap(fd, 8192, 1).unwrap();
+        let mid = m.addr.offset(5000);
+        d.write(mid, &[9, 9]).unwrap();
+        let mut out = [0u8; 2];
+        d.read(mid, &mut out).unwrap();
+        assert_eq!(out, [9, 9]);
+        assert_eq!(d.node_of(mid).unwrap(), 1);
+    }
+
+    #[test]
+    fn stats_track_allocation() {
+        let mut d = dev();
+        let fd = d.open();
+        let m = d.mmap(fd, 3 * 4096, 1).unwrap();
+        assert_eq!(d.allocated_on(1).unwrap(), 3 * 4096);
+        assert_eq!(d.allocated_on(0).unwrap(), 0);
+        d.munmap(m.addr).unwrap();
+        assert_eq!(d.allocated_on(1).unwrap(), 0);
+    }
+}

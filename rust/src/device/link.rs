@@ -1,0 +1,113 @@
+//! PCIe physical layer parameters of the emulated CXL link.
+//!
+//! The paper (§II): "transfer rates up to 32 GB/s and 64 GB/s in each
+//! direction over a 16-lane link, for PCIe5.0 and PCIe6.0". This module
+//! turns (generation, lanes) into the bandwidth term the timing model uses
+//! and tracks per-direction byte counters.
+
+/// PCIe generation of the emulated link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcieGen {
+    Gen5,
+    Gen6,
+}
+
+impl PcieGen {
+    /// Effective payload GB/s for a x16 link, per the paper.
+    fn x16_gbps(self) -> f64 {
+        match self {
+            PcieGen::Gen5 => 32.0,
+            PcieGen::Gen6 => 64.0,
+        }
+    }
+}
+
+/// CXL transaction-layer flit size (bytes). CXL 1.1/2.0 use 68-byte flits
+/// carrying 64 bytes of payload; we model payload granularity.
+pub const FLIT_BYTES: usize = 64;
+
+/// The emulated link: static shape + cumulative per-direction traffic.
+#[derive(Debug, Clone)]
+pub struct CxlLink {
+    pub gen: PcieGen,
+    pub lanes: u32,
+    /// Host -> device bytes (writes to remote memory).
+    pub tx_bytes: u64,
+    /// Device -> host bytes (reads from remote memory).
+    pub rx_bytes: u64,
+}
+
+impl CxlLink {
+    pub fn new(gen: PcieGen, lanes: u32) -> Self {
+        assert!(matches!(lanes, 1 | 2 | 4 | 8 | 16), "invalid lane count {lanes}");
+        Self { gen, lanes, tx_bytes: 0, rx_bytes: 0 }
+    }
+
+    /// Payload bandwidth in bytes per nanosecond (== GB/s) for this width.
+    pub fn bytes_per_ns(&self) -> f64 {
+        self.gen.x16_gbps() * (self.lanes as f64 / 16.0)
+    }
+
+    /// Flits needed for an `n`-byte transfer (minimum one).
+    pub fn flits_for(&self, n: usize) -> u64 {
+        (n.max(1)).div_ceil(FLIT_BYTES) as u64
+    }
+
+    pub fn record_tx(&mut self, bytes: usize) {
+        self.tx_bytes += bytes as u64;
+    }
+
+    pub fn record_rx(&mut self, bytes: usize) {
+        self.rx_bytes += bytes as u64;
+    }
+}
+
+impl Default for CxlLink {
+    /// PCIe5 x16 — the paper's headline configuration.
+    fn default() -> Self {
+        Self::new(PcieGen::Gen5, 16)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_bandwidths() {
+        assert_eq!(CxlLink::new(PcieGen::Gen5, 16).bytes_per_ns(), 32.0);
+        assert_eq!(CxlLink::new(PcieGen::Gen6, 16).bytes_per_ns(), 64.0);
+    }
+
+    #[test]
+    fn narrower_links_scale_down() {
+        assert_eq!(CxlLink::new(PcieGen::Gen5, 8).bytes_per_ns(), 16.0);
+        assert_eq!(CxlLink::new(PcieGen::Gen6, 4).bytes_per_ns(), 16.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid lane count")]
+    fn bad_lanes_panic() {
+        let _ = CxlLink::new(PcieGen::Gen5, 3);
+    }
+
+    #[test]
+    fn flit_math() {
+        let l = CxlLink::default();
+        assert_eq!(l.flits_for(0), 1);
+        assert_eq!(l.flits_for(1), 1);
+        assert_eq!(l.flits_for(64), 1);
+        assert_eq!(l.flits_for(65), 2);
+        assert_eq!(l.flits_for(4096), 64);
+    }
+
+    #[test]
+    fn traffic_counters() {
+        let mut l = CxlLink::default();
+        l.record_tx(100);
+        l.record_rx(200);
+        l.record_tx(1);
+        assert_eq!(l.tx_bytes, 101);
+        assert_eq!(l.rx_bytes, 200);
+    }
+}

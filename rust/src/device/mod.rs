@@ -1,0 +1,17 @@
+//! The emulated CXL device.
+//!
+//! * [`link`] — the PCIe physical layer the CXL protocols ride on.
+//! * [`controller`] — protocol multiplexing (CXL.io / CXL.mem), flit
+//!   accounting and outstanding-request tracking (feeds the timing model's
+//!   queue-depth input).
+//! * [`chardev`] — the character-device front end: the exact
+//!   `open`/`mmap(offset = node)`/`munmap`/`close` interface of the paper's
+//!   loadable kernel module (Figure 3).
+
+pub mod chardev;
+pub mod controller;
+pub mod link;
+
+pub use chardev::{EmucxlDevice, Fd, MappedRegion};
+pub use controller::{CxlController, CxlProtocol};
+pub use link::{CxlLink, PcieGen};

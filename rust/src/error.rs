@@ -1,0 +1,113 @@
+//! Error type shared across the framework.
+//!
+//! The variants mirror the failure modes of the paper's kernel-module
+//! backend (bad node ids, exhausted NUMA arenas, unmapped addresses) plus
+//! the runtime failure modes this reproduction adds (artifact loading,
+//! coordinator protocol errors).
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, EmucxlError>;
+
+/// All errors surfaced by the emucxl framework.
+#[derive(Debug)]
+pub enum EmucxlError {
+    /// Node id is outside the emulated topology.
+    InvalidNode { node: u32, num_nodes: u32 },
+    /// The target NUMA arena cannot satisfy the allocation.
+    OutOfMemory { node: u32, requested: usize, available: usize },
+    /// Address is not (or no longer) mapped by the device.
+    BadAddress(u64),
+    /// Access would run past the end of its allocation.
+    OutOfBounds { addr: u64, len: usize, alloc_size: usize },
+    /// Operation on a closed or never-opened device handle.
+    DeviceClosed,
+    /// Zero-sized or otherwise malformed request.
+    InvalidArgument(String),
+    /// Memset fill value must be 0 or -1 (paper Table II contract).
+    InvalidFill(i32),
+    /// XLA artifact missing / unparsable / shape mismatch.
+    Artifact(String),
+    /// PJRT runtime failure.
+    Xla(String),
+    /// Coordinator wire-protocol violation.
+    Protocol(String),
+    /// Tenant exceeded its memory quota.
+    QuotaExceeded { tenant: u32, requested: usize, quota: usize },
+    /// Underlying I/O error (coordinator sockets, trace files).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for EmucxlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::InvalidNode { node, num_nodes } => {
+                write!(f, "invalid NUMA node {node} (topology has {num_nodes})")
+            }
+            Self::OutOfMemory { node, requested, available } => write!(
+                f,
+                "node {node} out of memory: requested {requested} B, {available} B available"
+            ),
+            Self::BadAddress(a) => write!(f, "address {a:#x} is not mapped"),
+            Self::OutOfBounds { addr, len, alloc_size } => write!(
+                f,
+                "access [{addr:#x}, +{len}) exceeds allocation of {alloc_size} B"
+            ),
+            Self::DeviceClosed => write!(f, "emucxl device is not open"),
+            Self::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Self::InvalidFill(v) => {
+                write!(f, "emucxl_memset fill must be 0 or -1, got {v}")
+            }
+            Self::Artifact(m) => write!(f, "artifact error: {m}"),
+            Self::Xla(m) => write!(f, "xla runtime error: {m}"),
+            Self::Protocol(m) => write!(f, "protocol error: {m}"),
+            Self::QuotaExceeded { tenant, requested, quota } => write!(
+                f,
+                "tenant {tenant} quota exceeded: requested {requested} B over quota {quota} B"
+            ),
+            Self::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EmucxlError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for EmucxlError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_informative() {
+        let e = EmucxlError::OutOfMemory { node: 1, requested: 4096, available: 0 };
+        let s = e.to_string();
+        assert!(s.contains("node 1"));
+        assert!(s.contains("4096"));
+    }
+
+    #[test]
+    fn io_error_round_trips_source() {
+        use std::error::Error;
+        let e: EmucxlError =
+            std::io::Error::new(std::io::ErrorKind::Other, "boom").into();
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn bad_address_is_hex() {
+        assert!(EmucxlError::BadAddress(0xdead).to_string().contains("0xdead"));
+    }
+}

@@ -1,0 +1,362 @@
+//! Paper-experiment drivers, shared by the CLI, the examples and the
+//! benches — one function per table so every entry point reports identical
+//! numbers.
+//!
+//! * [`run_table3`] — §IV-A queue experiment (Table III).
+//! * [`run_table4`] — §IV-B KV GET-policy comparison (Table IV).
+//!
+//! Both are deterministic given their seeds; Table III additionally reports
+//! wall-clock stats of the emulator itself (the only nondeterministic part,
+//! since the paper's execution-time variance comes from host hardware we
+//! replaced with a virtual clock).
+
+use crate::api::EmucxlContext;
+use crate::config::EmucxlConfig;
+use crate::error::Result;
+use crate::middleware::kv::{GetPolicy, KvStore};
+use crate::middleware::queue::{EmucxlQueue, QueuePolicy};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::workload::hotset::HotsetSampler;
+
+// ---------------------------------------------------------------------------
+// Table III
+
+/// Parameters of the queue experiment (paper defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct Table3Params {
+    /// Operations per phase (paper: 15 000).
+    pub ops: usize,
+    /// Trials (mean/σ across trials).
+    pub trials: usize,
+    pub config_local_mb: usize,
+    pub config_remote_mb: usize,
+    /// Constant software cost charged per queue operation (ns): list
+    /// management, allocator bookkeeping, syscall overhead — the work the
+    /// paper's wall-clock measurement includes besides memory latency.
+    /// Calibrated so the remote/local ratio lands in the paper's band
+    /// (1.13x enqueue / 1.20x dequeue); set to 0 for pure memory latency.
+    pub sw_overhead_ns: f64,
+}
+
+impl Default for Table3Params {
+    fn default() -> Self {
+        // Each queue node is its own mmap and pins a full 4 KiB page (the
+        // paper's LKM behaves the same way), so 15 000 live nodes need
+        // ~61 MiB per node arena.
+        Self { ops: 15_000, trials: 10, config_local_mb: 96, config_remote_mb: 96, sw_overhead_ns: 2000.0 }
+    }
+}
+
+/// One Table III cell: a (phase, placement) pair.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub phase: &'static str,     // "enqueue" | "dequeue"
+    pub placement: &'static str, // "local" | "remote"
+    /// Virtual execution time of the 15 000 ops, milliseconds.
+    pub virtual_ms: Summary,
+    /// Wall-clock time of the emulator for the same ops, milliseconds.
+    pub wall_ms: Summary,
+}
+
+/// Run the §IV-A experiment: `ops` enqueues then `ops` dequeues, entirely
+/// local and entirely remote.
+pub fn run_table3(p: Table3Params) -> Result<Vec<Table3Row>> {
+    let mut rows = Vec::new();
+    for (policy, placement) in
+        [(QueuePolicy::AllLocal, "local"), (QueuePolicy::AllRemote, "remote")]
+    {
+        let mut enq_virtual = Vec::new();
+        let mut enq_wall = Vec::new();
+        let mut deq_virtual = Vec::new();
+        let mut deq_wall = Vec::new();
+        for trial in 0..p.trials {
+            let mut ctx = EmucxlContext::init(EmucxlConfig::sized(
+                p.config_local_mb << 20,
+                p.config_remote_mb << 20,
+            ))?;
+            let mut rng = Rng::new(trial as u64);
+            let mut q = EmucxlQueue::new(policy);
+
+            let v0 = ctx.now_ns();
+            let w0 = std::time::Instant::now();
+            for _ in 0..p.ops {
+                q.enqueue(&mut ctx, rng.next_u64() as i64)?;
+            }
+            enq_virtual.push(((ctx.now_ns() - v0) as f64 + p.sw_overhead_ns * p.ops as f64) / 1e6);
+            enq_wall.push(w0.elapsed().as_secs_f64() * 1e3);
+
+            let v1 = ctx.now_ns();
+            let w1 = std::time::Instant::now();
+            for _ in 0..p.ops {
+                q.dequeue(&mut ctx)?;
+            }
+            deq_virtual.push(((ctx.now_ns() - v1) as f64 + p.sw_overhead_ns * p.ops as f64) / 1e6);
+            deq_wall.push(w1.elapsed().as_secs_f64() * 1e3);
+        }
+        rows.push(Table3Row {
+            phase: "enqueue",
+            placement,
+            virtual_ms: Summary::of(&enq_virtual),
+            wall_ms: Summary::of(&enq_wall),
+        });
+        rows.push(Table3Row {
+            phase: "dequeue",
+            placement,
+            virtual_ms: Summary::of(&deq_virtual),
+            wall_ms: Summary::of(&deq_wall),
+        });
+    }
+    Ok(rows)
+}
+
+/// Pretty-print Table III next to the paper's numbers.
+pub fn format_table3(rows: &[Table3Row]) -> String {
+    let paper = [
+        ("enqueue", "local", 502.98, 9.23),
+        ("enqueue", "remote", 567.21, 7.93),
+        ("dequeue", "local", 417.69, 8.71),
+        ("dequeue", "remote", 500.40, 3.66),
+    ];
+    let mut s = String::new();
+    s.push_str(
+        "Table III — queue: 15000 ops, local vs remote placement\n\
+         phase    place   virt-ms(mean±sd)      wall-ms(mean±sd)    paper-ms(mean±sd)\n",
+    );
+    for r in rows {
+        let p = paper
+            .iter()
+            .find(|(ph, pl, _, _)| *ph == r.phase && *pl == r.placement)
+            .map(|&(_, _, m, sd)| format!("{m:.2}±{sd:.2}"))
+            .unwrap_or_default();
+        s.push_str(&format!(
+            "{:<8} {:<7} {:>9.3}±{:<8.3} {:>9.3}±{:<8.3} {:>14}\n",
+            r.phase,
+            r.placement,
+            r.virtual_ms.mean,
+            r.virtual_ms.stddev,
+            r.wall_ms.mean,
+            r.wall_ms.stddev,
+            p
+        ));
+    }
+    // Headline ratios the paper's text claims ("marginally costly").
+    let find = |ph: &str, pl: &str| {
+        rows.iter()
+            .find(|r| r.phase == ph && r.placement == pl)
+            .map(|r| r.virtual_ms.mean)
+            .unwrap_or(f64::NAN)
+    };
+    s.push_str(&format!(
+        "remote/local ratio: enqueue {:.2}x (paper {:.2}x), dequeue {:.2}x (paper {:.2}x)\n",
+        find("enqueue", "remote") / find("enqueue", "local"),
+        567.21 / 502.98,
+        find("dequeue", "remote") / find("dequeue", "local"),
+        500.40 / 417.69,
+    ));
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Table IV
+
+/// Parameters of the KV policy experiment (paper defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct Table4Params {
+    /// Total objects PUT (paper: 1000).
+    pub objects: usize,
+    /// Local capacity in objects (paper: 300).
+    pub local_capacity: usize,
+    /// GET requests (paper: 50 000).
+    pub gets: usize,
+    /// Value size in bytes (paper doesn't say; 256 B objects).
+    pub value_len: usize,
+    pub seed: u64,
+    /// Refresh LRU recency on local GET hits. `false` matches the paper's
+    /// measured Policy1 curve (recency set only by PUT/promotion); `true`
+    /// is textbook LRU and retains more of the hot set locally. See
+    /// EXPERIMENTS.md §Table IV for both runs.
+    pub refresh_on_get: bool,
+}
+
+impl Default for Table4Params {
+    fn default() -> Self {
+        Self {
+            objects: 1000,
+            local_capacity: 300,
+            gets: 50_000,
+            value_len: 256,
+            seed: 42,
+            refresh_on_get: false,
+        }
+    }
+}
+
+/// One Table IV row.
+#[derive(Debug, Clone, Copy)]
+pub struct Table4Row {
+    /// Hot-set percentage (None = uniform "Random Access" row).
+    pub hot_pct: Option<u32>,
+    /// % of GETs served from local memory under Policy1 / Policy2.
+    pub policy1_local: f64,
+    pub policy2_local: f64,
+}
+
+impl Table4Row {
+    pub fn difference(&self) -> f64 {
+        self.policy1_local - self.policy2_local
+    }
+}
+
+fn key_of(i: usize) -> Vec<u8> {
+    format!("key{i:06}").into_bytes()
+}
+
+/// Run one (hot_pct, policy) cell; returns % of GETs served locally.
+pub fn run_table4_cell(
+    p: &Table4Params,
+    hot_pct: Option<u32>,
+    policy: GetPolicy,
+) -> Result<f64> {
+    let mut ctx = EmucxlContext::init(EmucxlConfig::sized(32 << 20, 128 << 20))?;
+    let mut kv = KvStore::new(p.local_capacity, policy);
+    if !p.refresh_on_get {
+        kv = kv.without_get_refresh();
+    }
+    // Phase 1: 1000 PUTs. LRU leaves the most recent `local_capacity`
+    // objects local; everything older has been evicted to remote.
+    let value = vec![0xCD; p.value_len];
+    for i in 0..p.objects {
+        kv.put(&mut ctx, &key_of(i), &value)?;
+    }
+    // Phase 2: 50 000 GETs with the row's access skew.
+    let sampler = match hot_pct {
+        Some(pct) => HotsetSampler::paper_row(p.objects, pct),
+        None => HotsetSampler::uniform(p.objects),
+    };
+    let mut rng = Rng::new(p.seed);
+    let before = kv.stats();
+    for _ in 0..p.gets {
+        let k = sampler.sample(&mut rng);
+        kv.get(&mut ctx, &key_of(k))?;
+    }
+    let after = kv.stats();
+    let gets = (after.gets - before.gets) as f64;
+    let local = (after.local_hits - before.local_hits) as f64;
+    Ok(100.0 * local / gets)
+}
+
+/// Run the full Table IV sweep: 10%..90% hot sets plus the uniform row.
+pub fn run_table4(p: Table4Params) -> Result<Vec<Table4Row>> {
+    let mut rows = Vec::new();
+    for pct in (10..=90).step_by(10) {
+        rows.push(Table4Row {
+            hot_pct: Some(pct),
+            policy1_local: run_table4_cell(&p, Some(pct), GetPolicy::Promote)?,
+            policy2_local: run_table4_cell(&p, Some(pct), GetPolicy::InPlace)?,
+        });
+    }
+    rows.push(Table4Row {
+        hot_pct: None,
+        policy1_local: run_table4_cell(&p, None, GetPolicy::Promote)?,
+        policy2_local: run_table4_cell(&p, None, GetPolicy::InPlace)?,
+    });
+    Ok(rows)
+}
+
+/// Pretty-print Table IV next to the paper's numbers.
+pub fn format_table4(rows: &[Table4Row]) -> String {
+    let paper: [(Option<u32>, f64, f64); 10] = [
+        (Some(10), 81.37, 3.29),
+        (Some(20), 50.95, 3.77),
+        (Some(30), 28.59, 4.28),
+        (Some(40), 18.03, 4.94),
+        (Some(50), 14.87, 5.94),
+        (Some(60), 12.67, 7.57),
+        (Some(70), 12.68, 10.00),
+        (Some(80), 22.22, 21.17),
+        (Some(90), 30.43, 29.95),
+        (None, 29.79, 30.01),
+    ];
+    let mut s = String::new();
+    s.push_str(
+        "Table IV — KV store: %GETs served from local (90% of GETs to X% of objects)\n\
+         row        Policy1   Policy2   diff   | paper P1  paper P2\n",
+    );
+    for r in rows {
+        let label = match r.hot_pct {
+            Some(pct) => format!("{pct}%"),
+            None => "uniform".into(),
+        };
+        let pp = paper.iter().find(|(h, _, _)| *h == r.hot_pct);
+        s.push_str(&format!(
+            "{:<10} {:>7.2}% {:>8.2}% {:>6.2} | {:>8} {:>9}\n",
+            label,
+            r.policy1_local,
+            r.policy2_local,
+            r.difference(),
+            pp.map(|&(_, a, _)| format!("{a:.2}%")).unwrap_or_default(),
+            pp.map(|&(_, _, b)| format!("{b:.2}%")).unwrap_or_default(),
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_small_has_remote_slower() {
+        let rows = run_table3(Table3Params {
+            ops: 500,
+            trials: 2,
+            config_local_mb: 4,
+            config_remote_mb: 16,
+            // zero software overhead: assert pure memory-latency ordering
+            sw_overhead_ns: 0.0,
+        })
+        .unwrap();
+        assert_eq!(rows.len(), 4);
+        let v = |ph: &str, pl: &str| {
+            rows.iter()
+                .find(|r| r.phase == ph && r.placement == pl)
+                .unwrap()
+                .virtual_ms
+                .mean
+        };
+        assert!(v("enqueue", "remote") > v("enqueue", "local"));
+        assert!(v("dequeue", "remote") > v("dequeue", "local"));
+        // virtual time is deterministic across trials
+        assert!(rows.iter().all(|r| r.virtual_ms.stddev < 1e-9));
+    }
+
+    #[test]
+    fn table4_small_matches_paper_shape() {
+        let p = Table4Params {
+            objects: 100,
+            local_capacity: 30,
+            gets: 3000,
+            value_len: 64,
+            seed: 7,
+            ..Default::default()
+        };
+        let hot10_p1 = run_table4_cell(&p, Some(10), GetPolicy::Promote).unwrap();
+        let hot10_p2 = run_table4_cell(&p, Some(10), GetPolicy::InPlace).unwrap();
+        // Policy1 captures the hot set locally; Policy2 leaves it remote.
+        assert!(hot10_p1 > 60.0, "P1 {hot10_p1}");
+        assert!(hot10_p2 < 15.0, "P2 {hot10_p2}");
+        let uni_p1 = run_table4_cell(&p, None, GetPolicy::Promote).unwrap();
+        let uni_p2 = run_table4_cell(&p, None, GetPolicy::InPlace).unwrap();
+        // Under uniform access the two policies converge (paper: -0.22 diff).
+        assert!((uni_p1 - uni_p2).abs() < 10.0, "{uni_p1} vs {uni_p2}");
+    }
+
+    #[test]
+    fn formatting_contains_paper_columns() {
+        let rows = vec![Table4Row { hot_pct: Some(10), policy1_local: 80.0, policy2_local: 3.0 }];
+        let s = format_table4(&rows);
+        assert!(s.contains("81.37"));
+        assert!(s.contains("10%"));
+    }
+}

@@ -1,0 +1,54 @@
+//! # emucxl — an emulation framework for CXL-based disaggregated memory
+//!
+//! Production-grade reproduction of *"emucxl: an emulation framework for
+//! CXL-based disaggregated memory applications"* (Gond & Kulkarni, 2024) as
+//! a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the emulated CXL device, the paper's
+//!   standardized user-space API (Table II), the middleware use cases
+//!   (key-value store, slab allocator, direct-access queue) and a
+//!   multi-process pool coordinator.
+//! * **Layer 2** — a JAX window model of link congestion
+//!   (`python/compile/model.py`), AOT-lowered to HLO text.
+//! * **Layer 1** — the Pallas access-latency kernel
+//!   (`python/compile/kernels/latency.py`), executed from Rust through the
+//!   PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! compute graphs once; the Rust binary is self-contained afterwards.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use emucxl::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
+//! use emucxl::config::EmucxlConfig;
+//!
+//! let mut ctx = EmucxlContext::init(EmucxlConfig::default()).unwrap();
+//! let local = ctx.alloc(4096, NODE_LOCAL).unwrap();
+//! let remote = ctx.alloc(4096, NODE_REMOTE).unwrap();
+//! ctx.write(local, b"hello disaggregated world").unwrap();
+//! let moved = ctx.migrate(local, NODE_REMOTE).unwrap();
+//! assert!(!ctx.is_local(moved).unwrap());
+//! ctx.free(moved).unwrap();
+//! ctx.free(remote).unwrap();
+//! ctx.exit();
+//! ```
+
+pub mod api;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod error;
+pub mod experiments;
+pub mod mem;
+pub mod middleware;
+pub mod runtime;
+pub mod stats;
+pub mod timing;
+pub mod topology;
+pub mod util;
+pub mod workload;
+
+pub use api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
+pub use config::EmucxlConfig;
+pub use error::{EmucxlError, Result};

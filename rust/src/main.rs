@@ -1,0 +1,251 @@
+//! `emucxl` CLI — the launcher of the virtual appliance.
+//!
+//! Subcommands (std-only arg parsing; clap is not in the vendored set):
+//!
+//! ```text
+//! emucxl info                         topology + artifact status
+//! emucxl selftest [--artifacts DIR]   native vs XLA parity check
+//! emucxl table3 [--ops N --trials T]  paper Table III (queue)
+//! emucxl table4 [--gets N]            paper Table IV (KV policies)
+//! emucxl serve [--port P] [--artifacts DIR]   pool coordinator daemon
+//! emucxl replay --trace FILE [--artifacts DIR] trace through window model
+//! emucxl calibrate --local NS --remote NS [--artifacts DIR]
+//! ```
+
+use std::collections::HashMap;
+
+use emucxl::config::EmucxlConfig;
+use emucxl::coordinator::server::{PoolConfig, PoolServer};
+use emucxl::error::Result;
+use emucxl::experiments::{
+    format_table3, format_table4, run_table3, run_table4, Table3Params, Table4Params,
+};
+use emucxl::runtime::XlaRuntime;
+use emucxl::timing::desc::AccessDesc;
+use emucxl::timing::engine::TimingEngine;
+use emucxl::timing::model::TimingParams;
+use emucxl::util::rng::Rng;
+use emucxl::workload::trace::Trace;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let value = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(name.to_string(), value);
+        }
+        i += 1;
+    }
+    flags
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = EmucxlConfig::default();
+    println!("emucxl virtual appliance");
+    println!("{}", cfg.topology().describe());
+    println!("timing defaults: {:?}", TimingParams::default());
+    let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+    match XlaRuntime::open(&dir) {
+        Ok(rt) => {
+            println!(
+                "artifacts: OK ({}, batch={}, window={})",
+                rt.platform(),
+                rt.manifest().batch()?,
+                rt.manifest().window()?
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_selftest(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+    let rt = XlaRuntime::open(&dir)?;
+    let engine = TimingEngine::with_xla(TimingParams::default(), &rt)?;
+    let mut rng = Rng::new(7);
+    let descs: Vec<AccessDesc> = (0..4096)
+        .map(|_| {
+            let d = AccessDesc {
+                op: if rng.chance(0.3) {
+                    emucxl::timing::desc::Op::Write
+                } else {
+                    emucxl::timing::desc::Op::Read
+                },
+                node: (rng.chance(0.5)) as u32,
+                bytes: [64u64, 256, 4096, 65536][rng.index(4)],
+                qdepth: rng.index(64) as f32,
+            };
+            d
+        })
+        .collect();
+    let worst = engine.cross_check(&descs)?;
+    println!("native vs XLA parity over {} descriptors: max |Δ| = {worst} ns", descs.len());
+    if worst > 1e-3 {
+        println!("FAIL: parity drift exceeds 1e-3 ns");
+        std::process::exit(1);
+    }
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_table3(flags: &HashMap<String, String>) -> Result<()> {
+    let p = Table3Params {
+        ops: get(flags, "ops", 15_000),
+        trials: get(flags, "trials", 10),
+        ..Default::default()
+    };
+    let rows = run_table3(p)?;
+    print!("{}", format_table3(&rows));
+    Ok(())
+}
+
+fn cmd_table4(flags: &HashMap<String, String>) -> Result<()> {
+    let p = Table4Params {
+        gets: get(flags, "gets", 50_000),
+        objects: get(flags, "objects", 1000),
+        local_capacity: get(flags, "local-capacity", 300),
+        seed: get(flags, "seed", 42),
+        ..Default::default()
+    };
+    let rows = run_table4(p)?;
+    print!("{}", format_table4(&rows));
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let mut cfg = PoolConfig::default();
+    if let Some(dir) = flags.get("artifacts") {
+        cfg.emucxl = cfg.emucxl.with_artifacts(dir.clone());
+    }
+    let port = get(flags, "port", 7117u16);
+    let server = PoolServer::start(cfg, port)?;
+    println!("emucxl pool coordinator listening on {}", server.addr());
+    println!("press Ctrl+C to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_replay(flags: &HashMap<String, String>) -> Result<()> {
+    let path = flags
+        .get("trace")
+        .cloned()
+        .ok_or_else(|| emucxl::error::EmucxlError::InvalidArgument("--trace required".into()))?;
+    let trace = Trace::load(&path)?;
+    let (r, w, lb, rb) = trace.totals();
+    println!("trace: {} ops ({r} reads, {w} writes, {lb} local B, {rb} remote B)", trace.len());
+    let params = TimingParams::default();
+    let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+    match XlaRuntime::open(&dir) {
+        Ok(rt) => {
+            let window = rt.window_model()?;
+            let (w_len, b) = (window.window(), window.batch());
+            let chunk = w_len * b;
+            let mut occ = 0.0f32;
+            let mut total_ns = 0.0f64;
+            let mut max_ns = 0.0f32;
+            let mut rows: Vec<[f32; 4]> = trace.descs().iter().map(|d| d.encode()).collect();
+            let pad = (chunk - rows.len() % chunk) % chunk;
+            rows.extend(std::iter::repeat(AccessDesc::pad()).take(pad));
+            for c in rows.chunks(chunk) {
+                let out = window.run(c, &params, occ)?;
+                occ = out.final_occ;
+                total_ns += out.summary[0] as f64;
+                max_ns = max_ns.max(out.summary[1]);
+            }
+            println!(
+                "window-model replay (XLA): total={:.3} ms, max={:.1} ns, final occupancy={:.1} flits",
+                total_ns / 1e6,
+                max_ns,
+                occ
+            );
+        }
+        Err(e) => {
+            println!("artifacts unavailable ({e}); native replay");
+            let lats = params.latency_batch(&trace.descs());
+            let total: f64 = lats.iter().map(|&x| x as f64).sum();
+            println!("native replay: total={:.3} ms", total / 1e6);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(flags: &HashMap<String, String>) -> Result<()> {
+    // Fit the timing model to target base latencies using the AOT-compiled
+    // gradient artifact — demonstrates the L2 bwd path from Rust.
+    let target_local: f32 = get(flags, "local", 100.0);
+    let target_remote: f32 = get(flags, "remote", 400.0);
+    let steps: usize = get(flags, "steps", 500);
+    let dir = flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+    let rt = XlaRuntime::open(&dir)?;
+    let calib = rt.calib_step()?;
+    let b = calib.batch();
+
+    // Synthesize observations from the target machine's parameters.
+    let mut target = TimingParams::default();
+    target.local_base_ns = target_local;
+    target.remote_base_ns = target_remote;
+    let mut rng = Rng::new(1);
+    let descs: Vec<AccessDesc> = (0..b)
+        .map(|_| AccessDesc::read((rng.chance(0.5)) as u32, [64u64, 4096][rng.index(2)]))
+        .collect();
+    let observed: Vec<f32> = descs.iter().map(|d| target.latency_ns(d)).collect();
+
+    let mut params = TimingParams::default();
+    let mut loss = f32::INFINITY;
+    for step in 0..steps {
+        let (l, p) = calib.step(&params, &descs, &observed, 1e5)?;
+        params = p;
+        loss = l;
+        if step % 100 == 0 {
+            println!("step {step:>4}: loss={l:.6e}");
+        }
+    }
+    println!(
+        "calibrated: local_base={:.2} ns (target {target_local}), remote_base={:.2} ns (target {target_remote}), final loss={loss:.3e}",
+        params.local_base_ns, params.remote_base_ns
+    );
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: emucxl <info|selftest|table3|table4|serve|replay|calibrate> [--flags]\n\
+         see module docs in rust/src/main.rs for flag lists"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = match args.first() {
+        Some(c) => c.as_str(),
+        None => usage(),
+    };
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd {
+        "info" => cmd_info(&flags),
+        "selftest" => cmd_selftest(&flags),
+        "table3" => cmd_table3(&flags),
+        "table4" => cmd_table4(&flags),
+        "serve" => cmd_serve(&flags),
+        "replay" => cmd_replay(&flags),
+        "calibrate" => cmd_calibrate(&flags),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,296 @@
+//! Per-NUMA-node memory arena: the emulated physical memory of one node.
+//!
+//! Stands in for the socket-backed memory the paper's appliance maps into
+//! each vNUMA node. Frames are real process memory (a `Vec<u8>`), so reads
+//! and writes move real bytes — latency semantics are layered on top by
+//! the timing engine, not faked by sleeps.
+
+use crate::error::{EmucxlError, Result};
+use crate::mem::bitmap::PageBitmap;
+
+/// The emulated physical memory of one NUMA node.
+#[derive(Debug)]
+pub struct NodeArena {
+    node: u32,
+    page_size: usize,
+    buf: Vec<u8>,
+    bitmap: PageBitmap,
+    /// Pages currently pinned (the `SetPageReserved` analog — pages mapped
+    /// to user space must never be reclaimed underneath the mapping).
+    reserved: Vec<bool>,
+    /// Cumulative counters for `emucxl_stats`-style reporting.
+    pub total_allocs: u64,
+    pub total_frees: u64,
+}
+
+impl NodeArena {
+    pub fn new(node: u32, capacity: usize, page_size: usize) -> Self {
+        assert!(page_size > 0 && capacity >= page_size);
+        let pages = capacity / page_size;
+        Self {
+            node,
+            page_size,
+            buf: vec![0u8; pages * page_size],
+            bitmap: PageBitmap::new(pages),
+            reserved: vec![false; pages],
+            total_allocs: 0,
+            total_frees: 0,
+        }
+    }
+
+    pub fn node(&self) -> u32 {
+        self.node
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.bitmap.num_pages() * self.page_size
+    }
+
+    pub fn allocated_bytes(&self) -> usize {
+        self.bitmap.allocated() * self.page_size
+    }
+
+    pub fn free_bytes(&self) -> usize {
+        self.bitmap.free_pages() * self.page_size
+    }
+
+    pub fn largest_free_run_pages(&self) -> usize {
+        self.bitmap.largest_free_run()
+    }
+
+    /// Allocate `count` contiguous frames (the `kmalloc_node` analog);
+    /// frames come back zeroed and reserved (pinned).
+    ///
+    /// Perf (EXPERIMENTS.md §Perf L3-3): zeroing happens in `free_pages`,
+    /// not here — fresh frames are already zero (the arena buffer starts
+    /// zeroed) and recycled frames were scrubbed on release, so the alloc
+    /// path avoids touching page-sized memory (and the first-touch fault
+    /// moves to the application's first real access, as on real hardware).
+    pub fn alloc_pages(&mut self, count: usize) -> Result<usize> {
+        let start = self.bitmap.alloc(count).map_err(|e| match e {
+            EmucxlError::OutOfMemory { requested, available, .. } => {
+                EmucxlError::OutOfMemory {
+                    node: self.node,
+                    requested: requested * self.page_size,
+                    available: available * self.page_size,
+                }
+            }
+            other => other,
+        })?;
+        for p in start..start + count {
+            self.reserved[p] = true;
+        }
+        self.total_allocs += 1;
+        Ok(start)
+    }
+
+    /// Release frames (clears the reservation first, as the LKM does on
+    /// unmap before freeing). Scrubs the frames so the next allocation
+    /// sees zeros without paying for it on the alloc path.
+    pub fn free_pages(&mut self, start: usize, count: usize) -> Result<()> {
+        self.bitmap.free(start, count)?;
+        self.buf[start * self.page_size..(start + count) * self.page_size].fill(0);
+        for p in start..start + count {
+            self.reserved[p] = false;
+        }
+        self.total_frees += 1;
+        Ok(())
+    }
+
+    pub fn is_reserved(&self, page: usize) -> bool {
+        self.reserved.get(page).copied().unwrap_or(false)
+    }
+
+    /// Byte offset of a frame in the arena buffer.
+    #[inline]
+    fn off(&self, page: usize) -> usize {
+        page * self.page_size
+    }
+
+    /// Read bytes from a frame range. `offset` is relative to `start_page`.
+    pub fn read(&self, start_page: usize, offset: usize, out: &mut [u8]) -> Result<()> {
+        let base = self.off(start_page) + offset;
+        let end = base + out.len();
+        if end > self.buf.len() {
+            return Err(EmucxlError::OutOfBounds {
+                addr: base as u64,
+                len: out.len(),
+                alloc_size: self.buf.len(),
+            });
+        }
+        out.copy_from_slice(&self.buf[base..end]);
+        Ok(())
+    }
+
+    /// Write bytes into a frame range.
+    pub fn write(&mut self, start_page: usize, offset: usize, data: &[u8]) -> Result<()> {
+        let base = self.off(start_page) + offset;
+        let end = base + data.len();
+        if end > self.buf.len() {
+            return Err(EmucxlError::OutOfBounds {
+                addr: base as u64,
+                len: data.len(),
+                alloc_size: self.buf.len(),
+            });
+        }
+        self.buf[base..end].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Fill a range with a byte value.
+    pub fn fill(&mut self, start_page: usize, offset: usize, len: usize, value: u8) -> Result<()> {
+        let base = self.off(start_page) + offset;
+        let end = base + len;
+        if end > self.buf.len() {
+            return Err(EmucxlError::OutOfBounds {
+                addr: base as u64,
+                len,
+                alloc_size: self.buf.len(),
+            });
+        }
+        self.buf[base..end].fill(value);
+        Ok(())
+    }
+
+    /// Direct slice view of a page range (used by intra-arena memmove).
+    pub fn slice(&self, start_page: usize, offset: usize, len: usize) -> Result<&[u8]> {
+        let base = self.off(start_page) + offset;
+        if base + len > self.buf.len() {
+            return Err(EmucxlError::OutOfBounds {
+                addr: base as u64,
+                len,
+                alloc_size: self.buf.len(),
+            });
+        }
+        Ok(&self.buf[base..base + len])
+    }
+
+    /// Overlap-safe copy within this arena (the memmove substrate).
+    pub fn copy_within(
+        &mut self,
+        src_page: usize,
+        src_off: usize,
+        dst_page: usize,
+        dst_off: usize,
+        len: usize,
+    ) -> Result<()> {
+        let src = self.off(src_page) + src_off;
+        let dst = self.off(dst_page) + dst_off;
+        if src + len > self.buf.len() || dst + len > self.buf.len() {
+            return Err(EmucxlError::OutOfBounds {
+                addr: src.max(dst) as u64,
+                len,
+                alloc_size: self.buf.len(),
+            });
+        }
+        self.buf.copy_within(src..src + len, dst);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena() -> NodeArena {
+        NodeArena::new(1, 64 * 4096, 4096)
+    }
+
+    #[test]
+    fn pages_come_back_zeroed() {
+        let mut a = arena();
+        let p = a.alloc_pages(1).unwrap();
+        a.write(p, 0, &[0xFF; 4096]).unwrap();
+        a.free_pages(p, 1).unwrap();
+        let q = a.alloc_pages(1).unwrap();
+        let mut buf = [0xAAu8; 4096];
+        a.read(q, 0, &mut buf).unwrap();
+        assert!(buf.iter().all(|&b| b == 0), "recycled page not zeroed");
+    }
+
+    #[test]
+    fn read_write_roundtrip_across_pages() {
+        let mut a = arena();
+        let p = a.alloc_pages(2).unwrap();
+        let data: Vec<u8> = (0..5000).map(|i| (i % 251) as u8).collect();
+        a.write(p, 100, &data).unwrap();
+        let mut out = vec![0u8; 5000];
+        a.read(p, 100, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn reservation_tracks_mapping() {
+        let mut a = arena();
+        let p = a.alloc_pages(3).unwrap();
+        assert!(a.is_reserved(p) && a.is_reserved(p + 2));
+        a.free_pages(p, 3).unwrap();
+        assert!(!a.is_reserved(p));
+    }
+
+    #[test]
+    fn oom_carries_node_id() {
+        let mut a = NodeArena::new(7, 2 * 4096, 4096);
+        a.alloc_pages(2).unwrap();
+        match a.alloc_pages(1) {
+            Err(EmucxlError::OutOfMemory { node, .. }) => assert_eq!(node, 7),
+            other => panic!("expected OOM, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_bounds_read_rejected() {
+        let mut a = arena();
+        let p = a.alloc_pages(1).unwrap();
+        let mut buf = vec![0u8; 64 * 4096];
+        assert!(a.read(p, 4090, &mut buf).is_err());
+    }
+
+    #[test]
+    fn fill_and_slice() {
+        let mut a = arena();
+        let p = a.alloc_pages(1).unwrap();
+        a.fill(p, 10, 20, 0xFF).unwrap();
+        let s = a.slice(p, 0, 40).unwrap();
+        assert_eq!(s[9], 0);
+        assert_eq!(s[10], 0xFF);
+        assert_eq!(s[29], 0xFF);
+        assert_eq!(s[30], 0);
+    }
+
+    #[test]
+    fn copy_within_handles_overlap() {
+        let mut a = arena();
+        let p = a.alloc_pages(1).unwrap();
+        a.write(p, 0, &[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+        // overlapping forward move: [0..6) -> [2..8)
+        a.copy_within(p, 0, p, 2, 6).unwrap();
+        let mut out = [0u8; 8];
+        a.read(p, 0, &mut out).unwrap();
+        assert_eq!(out, [1, 2, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn counters_advance() {
+        let mut a = arena();
+        let p = a.alloc_pages(1).unwrap();
+        a.free_pages(p, 1).unwrap();
+        assert_eq!(a.total_allocs, 1);
+        assert_eq!(a.total_frees, 1);
+    }
+
+    #[test]
+    fn accounting_bytes() {
+        let mut a = arena();
+        assert_eq!(a.capacity(), 64 * 4096);
+        let p = a.alloc_pages(4).unwrap();
+        assert_eq!(a.allocated_bytes(), 4 * 4096);
+        assert_eq!(a.free_bytes(), 60 * 4096);
+        a.free_pages(p, 4).unwrap();
+        assert_eq!(a.allocated_bytes(), 0);
+    }
+}

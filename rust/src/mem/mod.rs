@@ -1,0 +1,47 @@
+//! Memory substrate of the emulated machine.
+//!
+//! Plays the role of the paper's kernel-side memory management:
+//! [`bitmap`] + [`arena`] stand in for the per-node physical page pools
+//! `kmalloc_node` draws from; [`pagetable`] + [`vaspace`] stand in for the
+//! `remap_pfn_range` mapping of those pages into a process address space.
+
+pub mod arena;
+pub mod bitmap;
+pub mod pagetable;
+pub mod vaspace;
+
+pub use arena::NodeArena;
+pub use bitmap::PageBitmap;
+pub use pagetable::{PageTable, Pfn, Vpn};
+pub use vaspace::{VAddr, VaSpace};
+
+/// Default emulated page size (4 KiB, like the paper's LKM mappings).
+pub const PAGE_SIZE: usize = 4096;
+
+/// Round `n` up to the next multiple of `page` (power of two not required).
+#[inline]
+pub fn round_up(n: usize, page: usize) -> usize {
+    debug_assert!(page > 0);
+    n.div_ceil(page) * page
+}
+
+/// Number of pages needed to hold `n` bytes.
+#[inline]
+pub fn pages_for(n: usize, page: usize) -> usize {
+    n.div_ceil(page)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounding() {
+        assert_eq!(round_up(1, 4096), 4096);
+        assert_eq!(round_up(4096, 4096), 4096);
+        assert_eq!(round_up(4097, 4096), 8192);
+        assert_eq!(pages_for(1, 4096), 1);
+        assert_eq!(pages_for(8192, 4096), 2);
+        assert_eq!(pages_for(8193, 4096), 3);
+    }
+}

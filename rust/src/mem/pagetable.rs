@@ -1,0 +1,191 @@
+//! Page table of the emulated process: VA region → (node, frame range).
+//!
+//! The analog of the mappings `remap_pfn_range()` installs in the paper's
+//! LKM. Because the LKM maps one physically contiguous `kmalloc_node`
+//! region per mmap call, each mapping here is a single (node, start-frame,
+//! page-count) extent — lookup of interior addresses resolves to
+//! (node, frame, in-frame offset).
+
+use std::collections::BTreeMap;
+
+use crate::error::{EmucxlError, Result};
+use crate::mem::vaspace::VAddr;
+
+/// Virtual page number (newtype for clarity in signatures).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Vpn(pub u64);
+
+/// Physical frame number within a node arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pfn(pub usize);
+
+/// One installed mapping (a vm_area in LKM terms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Extent {
+    pub base: VAddr,
+    pub node: u32,
+    pub start_frame: usize,
+    pub pages: usize,
+}
+
+/// Resolution of a virtual address to emulated physical memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Resolved {
+    pub node: u32,
+    pub start_frame: usize,
+    /// Byte offset of the address within the extent.
+    pub offset: usize,
+    /// Bytes from the address to the end of the extent.
+    pub remaining: usize,
+}
+
+/// Sorted map of disjoint extents keyed by base VA.
+#[derive(Debug, Default)]
+pub struct PageTable {
+    page_size: usize,
+    extents: BTreeMap<u64, Extent>,
+}
+
+impl PageTable {
+    pub fn new(page_size: usize) -> Self {
+        Self { page_size, extents: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.extents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.extents.is_empty()
+    }
+
+    /// Install a mapping. Fails on any overlap with an existing extent.
+    pub fn map(&mut self, base: VAddr, node: u32, start_frame: usize, pages: usize) -> Result<()> {
+        if pages == 0 {
+            return Err(EmucxlError::InvalidArgument("map of 0 pages".into()));
+        }
+        let len = (pages * self.page_size) as u64;
+        // Previous extent must end at or before base; next must start at or
+        // after base+len.
+        if let Some((_, prev)) = self.extents.range(..=base.0).next_back() {
+            let prev_end = prev.base.0 + (prev.pages * self.page_size) as u64;
+            if prev_end > base.0 {
+                return Err(EmucxlError::BadAddress(base.0));
+            }
+        }
+        if let Some((&next_base, _)) = self.extents.range(base.0..).next() {
+            if base.0 + len > next_base {
+                return Err(EmucxlError::BadAddress(base.0));
+            }
+        }
+        self.extents.insert(base.0, Extent { base, node, start_frame, pages });
+        Ok(())
+    }
+
+    /// Remove the mapping with exactly this base.
+    pub fn unmap(&mut self, base: VAddr) -> Result<Extent> {
+        self.extents.remove(&base.0).ok_or(EmucxlError::BadAddress(base.0))
+    }
+
+    /// Extent with exactly this base VA.
+    pub fn extent(&self, base: VAddr) -> Result<&Extent> {
+        self.extents.get(&base.0).ok_or(EmucxlError::BadAddress(base.0))
+    }
+
+    /// Resolve any address (including interior pointers) to its extent.
+    pub fn resolve(&self, addr: VAddr) -> Result<Resolved> {
+        let (_, e) = self
+            .extents
+            .range(..=addr.0)
+            .next_back()
+            .ok_or(EmucxlError::BadAddress(addr.0))?;
+        let len = e.pages * self.page_size;
+        let off = (addr.0 - e.base.0) as usize;
+        if off >= len {
+            return Err(EmucxlError::BadAddress(addr.0));
+        }
+        Ok(Resolved { node: e.node, start_frame: e.start_frame, offset: off, remaining: len - off })
+    }
+
+    /// Iterate extents in VA order.
+    pub fn iter(&self) -> impl Iterator<Item = &Extent> {
+        self.extents.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt() -> PageTable {
+        PageTable::new(4096)
+    }
+
+    #[test]
+    fn map_resolve_unmap() {
+        let mut t = pt();
+        t.map(VAddr(0x1000_0000), 1, 42, 4).unwrap();
+        let r = t.resolve(VAddr(0x1000_0000 + 5000)).unwrap();
+        assert_eq!(r.node, 1);
+        assert_eq!(r.start_frame, 42);
+        assert_eq!(r.offset, 5000);
+        assert_eq!(r.remaining, 4 * 4096 - 5000);
+        let e = t.unmap(VAddr(0x1000_0000)).unwrap();
+        assert_eq!(e.pages, 4);
+        assert!(t.resolve(VAddr(0x1000_0000)).is_err());
+    }
+
+    #[test]
+    fn overlap_rejected() {
+        let mut t = pt();
+        t.map(VAddr(0x1000), 0, 0, 2).unwrap();
+        assert!(t.map(VAddr(0x1000), 0, 10, 1).is_err()); // same base
+        assert!(t.map(VAddr(0x2000), 0, 10, 1).is_err()); // inside prev
+        assert!(t.map(VAddr(0x0000), 0, 10, 2).is_err()); // runs into next
+        t.map(VAddr(0x3000), 0, 10, 1).unwrap(); // adjacent is fine
+    }
+
+    #[test]
+    fn interior_pointer_resolves() {
+        let mut t = pt();
+        t.map(VAddr(0x4000), 1, 7, 2).unwrap();
+        let r = t.resolve(VAddr(0x4000 + 8191)).unwrap();
+        assert_eq!(r.remaining, 1);
+    }
+
+    #[test]
+    fn address_past_end_rejected() {
+        let mut t = pt();
+        t.map(VAddr(0x4000), 1, 7, 2).unwrap();
+        assert!(t.resolve(VAddr(0x4000 + 8192)).is_err());
+    }
+
+    #[test]
+    fn address_before_all_extents_rejected() {
+        let mut t = pt();
+        t.map(VAddr(0x4000), 1, 7, 2).unwrap();
+        assert!(t.resolve(VAddr(0x3fff)).is_err());
+    }
+
+    #[test]
+    fn unmap_unknown_base_rejected() {
+        let mut t = pt();
+        assert!(t.unmap(VAddr(0x9000)).is_err());
+    }
+
+    #[test]
+    fn zero_page_map_rejected() {
+        let mut t = pt();
+        assert!(t.map(VAddr(0x1000), 0, 0, 0).is_err());
+    }
+
+    #[test]
+    fn iteration_in_va_order() {
+        let mut t = pt();
+        t.map(VAddr(0x9000), 0, 1, 1).unwrap();
+        t.map(VAddr(0x1000), 0, 2, 1).unwrap();
+        let bases: Vec<u64> = t.iter().map(|e| e.base.0).collect();
+        assert_eq!(bases, vec![0x1000, 0x9000]);
+        assert_eq!(t.len(), 2);
+    }
+}

@@ -1,0 +1,246 @@
+//! O(1) LRU list: slot-indexed intrusive doubly-linked list.
+//!
+//! Tokens are stable slot indices; the store keeps them in its hash index
+//! so `move_to_front` / `remove` are constant time — the store's PUT path
+//! must not degrade as the object count grows (the paper's 1000-object /
+//! 50 000-GET experiment would be quadratic otherwise).
+
+const NIL: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+struct Node<K> {
+    prev: usize,
+    next: usize,
+    key: Option<K>,
+}
+
+/// LRU order over keys; front = most recently used.
+#[derive(Debug, Clone)]
+pub struct LruList<K> {
+    nodes: Vec<Node<K>>,
+    head: usize,
+    tail: usize,
+    free: Vec<usize>,
+    len: usize,
+}
+
+impl<K> Default for LruList<K> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<K> LruList<K> {
+    pub fn new() -> Self {
+        Self { nodes: Vec::new(), head: NIL, tail: NIL, free: Vec::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn alloc_slot(&mut self, key: K) -> usize {
+        if let Some(i) = self.free.pop() {
+            self.nodes[i] = Node { prev: NIL, next: NIL, key: Some(key) };
+            i
+        } else {
+            self.nodes.push(Node { prev: NIL, next: NIL, key: Some(key) });
+            self.nodes.len() - 1
+        }
+    }
+
+    fn link_front(&mut self, i: usize) {
+        self.nodes[i].prev = NIL;
+        self.nodes[i].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.nodes[i].prev, self.nodes[i].next);
+        if prev != NIL {
+            self.nodes[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    /// Insert at MRU position; returns a stable token.
+    pub fn push_front(&mut self, key: K) -> usize {
+        let i = self.alloc_slot(key);
+        self.link_front(i);
+        self.len += 1;
+        i
+    }
+
+    /// Move an existing entry to MRU position.
+    pub fn move_to_front(&mut self, token: usize) {
+        debug_assert!(self.nodes[token].key.is_some(), "stale token");
+        if self.head == token {
+            return;
+        }
+        self.unlink(token);
+        self.link_front(token);
+    }
+
+    /// Remove an entry by token, returning its key.
+    pub fn remove(&mut self, token: usize) -> K {
+        let key = self.nodes[token].key.take().expect("stale token");
+        self.unlink(token);
+        self.free.push(token);
+        self.len -= 1;
+        key
+    }
+
+    /// Evict the LRU entry; returns its key.
+    pub fn pop_back(&mut self) -> Option<K> {
+        if self.tail == NIL {
+            return None;
+        }
+        Some(self.remove(self.tail))
+    }
+
+    /// Key at the LRU position (peek).
+    pub fn back(&self) -> Option<&K> {
+        if self.tail == NIL {
+            None
+        } else {
+            self.nodes[self.tail].key.as_ref()
+        }
+    }
+
+    /// Front-to-back key order (MRU first) — test/diagnostic helper.
+    pub fn keys(&self) -> Vec<&K> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut i = self.head;
+        while i != NIL {
+            if let Some(k) = self.nodes[i].key.as_ref() {
+                out.push(k);
+            }
+            i = self.nodes[i].next;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::VecDeque;
+
+    #[test]
+    fn push_and_pop_order() {
+        let mut l = LruList::new();
+        l.push_front("a");
+        l.push_front("b");
+        l.push_front("c");
+        assert_eq!(l.keys(), vec![&"c", &"b", &"a"]);
+        assert_eq!(l.pop_back(), Some("a"));
+        assert_eq!(l.pop_back(), Some("b"));
+        assert_eq!(l.pop_back(), Some("c"));
+        assert_eq!(l.pop_back(), None);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn move_to_front_reorders() {
+        let mut l = LruList::new();
+        let a = l.push_front(1);
+        let _b = l.push_front(2);
+        let _c = l.push_front(3);
+        l.move_to_front(a);
+        assert_eq!(l.keys(), vec![&1, &3, &2]);
+        assert_eq!(l.back(), Some(&2));
+    }
+
+    #[test]
+    fn remove_middle() {
+        let mut l = LruList::new();
+        let _a = l.push_front("a");
+        let b = l.push_front("b");
+        let _c = l.push_front("c");
+        assert_eq!(l.remove(b), "b");
+        assert_eq!(l.keys(), vec![&"c", &"a"]);
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn slots_are_recycled() {
+        let mut l = LruList::new();
+        let a = l.push_front(1);
+        l.remove(a);
+        let b = l.push_front(2);
+        assert_eq!(a, b, "freed slot should be reused");
+    }
+
+    #[test]
+    fn single_element_move_is_noop() {
+        let mut l = LruList::new();
+        let a = l.push_front("x");
+        l.move_to_front(a);
+        assert_eq!(l.keys(), vec![&"x"]);
+        assert_eq!(l.back(), Some(&"x"));
+    }
+
+    #[test]
+    fn randomized_against_vecdeque_model() {
+        // Model-based property test: LruList must agree with a naive
+        // VecDeque model under random push/move/remove/pop.
+        let mut rng = Rng::new(99);
+        let mut l: LruList<u64> = LruList::new();
+        let mut model: VecDeque<u64> = VecDeque::new(); // front = MRU
+        let mut tokens: Vec<(u64, usize)> = Vec::new();
+        let mut next_key = 0u64;
+        for _ in 0..2000 {
+            match rng.index(4) {
+                0 => {
+                    let k = next_key;
+                    next_key += 1;
+                    tokens.push((k, l.push_front(k)));
+                    model.push_front(k);
+                }
+                1 if !tokens.is_empty() => {
+                    let (k, t) = tokens[rng.index(tokens.len())];
+                    l.move_to_front(t);
+                    let pos = model.iter().position(|&x| x == k).unwrap();
+                    model.remove(pos);
+                    model.push_front(k);
+                }
+                2 if !tokens.is_empty() => {
+                    let i = rng.index(tokens.len());
+                    let (k, t) = tokens.swap_remove(i);
+                    assert_eq!(l.remove(t), k);
+                    let pos = model.iter().position(|&x| x == k).unwrap();
+                    model.remove(pos);
+                }
+                _ => {
+                    let got = l.pop_back();
+                    let want = model.pop_back();
+                    assert_eq!(got, want);
+                    if let Some(k) = got {
+                        tokens.retain(|&(key, _)| key != k);
+                    }
+                }
+            }
+            assert_eq!(l.len(), model.len());
+            let keys: Vec<u64> = l.keys().into_iter().copied().collect();
+            let model_keys: Vec<u64> = model.iter().copied().collect();
+            assert_eq!(keys, model_keys);
+        }
+    }
+}

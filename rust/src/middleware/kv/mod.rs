@@ -1,0 +1,15 @@
+//! Key-value store middleware (paper §IV-B, Listings 2–4).
+//!
+//! Applications call `put`/`get`/`delete`; the store manages object
+//! placement across local and remote emucxl memory: objects are PUT into
+//! local memory (MRU position), evicted to remote memory in LRU order when
+//! the local capacity is exceeded, and — depending on the GET policy —
+//! promoted back on access.
+
+pub mod lru;
+pub mod policy;
+pub mod store;
+
+pub use lru::LruList;
+pub use policy::GetPolicy;
+pub use store::{KvStats, KvStore};

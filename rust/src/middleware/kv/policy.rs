@@ -1,0 +1,81 @@
+//! GET-request policies for objects found in remote memory (paper §IV-B).
+//!
+//! * **Policy1** — optimistic: a GET that finds its object in remote memory
+//!   moves it to local memory, "akin to caching for subsequent access".
+//! * **Policy2** — conservative: retrieve in place, never move data.
+//!
+//! The trait lets users add their own (e.g. promote-on-Nth-access); the
+//! enum covers the two the paper evaluates in Table IV.
+
+/// What to do when a GET finds its object in remote memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GetPolicy {
+    /// Paper Policy1: optimistically promote to local memory on access.
+    Promote,
+    /// Paper Policy2: read in place, no data movement.
+    InPlace,
+    /// Extension (the "more subtle user-space policies" §IV-A invites):
+    /// promote only once an object has been GET `n` times — filters
+    /// one-hit wonders out of local memory at the cost of extra remote
+    /// reads for genuinely hot objects.
+    PromoteAfter(u64),
+}
+
+impl GetPolicy {
+    /// Should this remote hit be promoted to local memory?
+    /// `access_count` is the object's lifetime GET count (this access
+    /// included).
+    pub fn promote_on_get(self, access_count: u64) -> bool {
+        match self {
+            GetPolicy::Promote => true,
+            GetPolicy::InPlace => false,
+            GetPolicy::PromoteAfter(n) => access_count >= n,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GetPolicy::Promote => "Policy1",
+            GetPolicy::InPlace => "Policy2",
+            GetPolicy::PromoteAfter(_) => "PromoteAfterN",
+        }
+    }
+}
+
+impl std::fmt::Display for GetPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy1_promotes() {
+        assert!(GetPolicy::Promote.promote_on_get(0));
+        assert!(GetPolicy::Promote.promote_on_get(100));
+    }
+
+    #[test]
+    fn policy2_never_promotes() {
+        assert!(!GetPolicy::InPlace.promote_on_get(0));
+        assert!(!GetPolicy::InPlace.promote_on_get(100));
+    }
+
+    #[test]
+    fn names_match_paper() {
+        assert_eq!(GetPolicy::Promote.to_string(), "Policy1");
+        assert_eq!(GetPolicy::InPlace.to_string(), "Policy2");
+    }
+
+    #[test]
+    fn promote_after_n_thresholds() {
+        let p = GetPolicy::PromoteAfter(3);
+        assert!(!p.promote_on_get(1));
+        assert!(!p.promote_on_get(2));
+        assert!(p.promote_on_get(3));
+        assert!(p.promote_on_get(4));
+    }
+}

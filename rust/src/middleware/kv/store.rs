@@ -1,0 +1,473 @@
+//! The key-value store itself (paper Listings 2–4).
+//!
+//! Object payloads (`kvs_pair`: key bytes + value bytes, plus a small
+//! header) live in emucxl memory; the middleware keeps a host-side hash
+//! index and two LRU lists (local, remote) — the paper's
+//! `kvs->local_head` / `kvs->remote_head` object lists — so placement
+//! decisions are O(1).
+//!
+//! PUT inserts at the local MRU position and evicts the local LRU object
+//! to remote memory when the local capacity (object count) is exceeded,
+//! "assume remote memory is sufficiently large" (Listing 2). GET behaviour
+//! under remote hits is governed by [`GetPolicy`].
+
+use std::collections::HashMap;
+
+use crate::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
+use crate::error::{EmucxlError, Result};
+use crate::mem::vaspace::VAddr;
+use crate::middleware::kv::lru::LruList;
+use crate::middleware::kv::policy::GetPolicy;
+
+/// Object header stored in emulated memory ahead of key/value bytes.
+const HDR: usize = 8; // key_len u32 | val_len u32
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Tier {
+    Local,
+    Remote,
+}
+
+#[derive(Debug)]
+struct Entry {
+    addr: VAddr,
+    tier: Tier,
+    token: usize,
+    key_len: usize,
+    val_len: usize,
+    access_count: u64,
+}
+
+impl Entry {
+    fn obj_size(&self) -> usize {
+        HDR + self.key_len + self.val_len
+    }
+}
+
+/// Operation counters (Table IV's % local is `local_hits / gets`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvStats {
+    pub puts: u64,
+    pub gets: u64,
+    pub deletes: u64,
+    pub local_hits: u64,
+    pub remote_hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub promotions: u64,
+}
+
+impl KvStats {
+    /// Fraction of GETs served from local memory (Table IV's "% Local").
+    pub fn local_fraction(&self) -> f64 {
+        if self.gets == 0 {
+            0.0
+        } else {
+            self.local_hits as f64 / self.gets as f64
+        }
+    }
+}
+
+/// The emucxl-backed key-value store.
+#[derive(Debug)]
+pub struct KvStore {
+    index: HashMap<Vec<u8>, Entry>,
+    local_lru: LruList<Vec<u8>>,
+    remote_lru: LruList<Vec<u8>>,
+    local_capacity: usize,
+    policy: GetPolicy,
+    /// Refresh an object's LRU recency on local GET hits. `true` is
+    /// textbook LRU; `false` reproduces the paper's measured Policy1
+    /// behaviour, where only PUT/promotion set recency (insertion order)
+    /// and local hits do not — see EXPERIMENTS.md §Table IV.
+    refresh_on_get: bool,
+    stats: KvStats,
+}
+
+impl KvStore {
+    /// `local_capacity` is in objects, as in the paper's experiment
+    /// (300 local / 1000 remote).
+    pub fn new(local_capacity: usize, policy: GetPolicy) -> Self {
+        assert!(local_capacity > 0, "local capacity must be positive");
+        Self {
+            index: HashMap::new(),
+            local_lru: LruList::new(),
+            remote_lru: LruList::new(),
+            local_capacity,
+            policy,
+            refresh_on_get: true,
+            stats: KvStats::default(),
+        }
+    }
+
+    /// Disable LRU refresh on local GET hits (paper-faithful mode).
+    pub fn without_get_refresh(mut self) -> Self {
+        self.refresh_on_get = false;
+        self
+    }
+
+    pub fn stats(&self) -> KvStats {
+        self.stats
+    }
+
+    pub fn policy(&self) -> GetPolicy {
+        self.policy
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn local_count(&self) -> usize {
+        self.local_lru.len()
+    }
+
+    pub fn remote_count(&self) -> usize {
+        self.remote_lru.len()
+    }
+
+    fn write_object(
+        ctx: &mut EmucxlContext,
+        addr: VAddr,
+        key: &[u8],
+        value: &[u8],
+    ) -> Result<()> {
+        let mut buf = Vec::with_capacity(HDR + key.len() + value.len());
+        buf.extend_from_slice(&(key.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(value.len() as u32).to_le_bytes());
+        buf.extend_from_slice(key);
+        buf.extend_from_slice(value);
+        ctx.write(addr, &buf)?;
+        Ok(())
+    }
+
+    fn read_value(ctx: &mut EmucxlContext, e: &Entry) -> Result<Vec<u8>> {
+        let mut buf = vec![0u8; e.val_len];
+        ctx.read_at(e.addr, HDR + e.key_len, &mut buf)?;
+        Ok(buf)
+    }
+
+    /// Evict the local LRU object to remote memory (Listing 2 comment:
+    /// "Evict the object at the tail ... move the evicted object to remote
+    /// memory").
+    fn evict_one(&mut self, ctx: &mut EmucxlContext) -> Result<()> {
+        let key = match self.local_lru.pop_back() {
+            Some(k) => k,
+            None => return Ok(()),
+        };
+        let e = self.index.get_mut(&key).expect("index/lru out of sync");
+        let new_addr = ctx.migrate(e.addr, NODE_REMOTE)?;
+        e.addr = new_addr;
+        e.tier = Tier::Remote;
+        e.token = self.remote_lru.push_front(key);
+        self.stats.evictions += 1;
+        Ok(())
+    }
+
+    /// Promote a remote object to local memory, evicting first if full.
+    fn promote(&mut self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<()> {
+        if self.local_lru.len() >= self.local_capacity {
+            self.evict_one(ctx)?;
+        }
+        let e = self.index.get_mut(key).expect("promote of unknown key");
+        debug_assert_eq!(e.tier, Tier::Remote);
+        self.remote_lru.remove(e.token);
+        let new_addr = ctx.migrate(e.addr, NODE_LOCAL)?;
+        e.addr = new_addr;
+        e.tier = Tier::Local;
+        e.token = self.local_lru.push_front(key.to_vec());
+        self.stats.promotions += 1;
+        Ok(())
+    }
+
+    /// Listing 2 PUT: create the object in local memory at the MRU
+    /// position; evict LRU to remote if over capacity. Existing keys are
+    /// updated in place (and refreshed to local MRU).
+    pub fn put(&mut self, ctx: &mut EmucxlContext, key: &[u8], value: &[u8]) -> Result<()> {
+        if key.is_empty() {
+            return Err(EmucxlError::InvalidArgument("empty key".into()));
+        }
+        self.stats.puts += 1;
+        if self.index.contains_key(key) {
+            // Update: free the old object and fall through to fresh insert.
+            self.delete_inner(ctx, key)?;
+        }
+        let size = HDR + key.len() + value.len();
+        let addr = ctx.alloc(size, NODE_LOCAL)?;
+        Self::write_object(ctx, addr, key, value)?;
+        let token = self.local_lru.push_front(key.to_vec());
+        self.index.insert(
+            key.to_vec(),
+            Entry {
+                addr,
+                tier: Tier::Local,
+                token,
+                key_len: key.len(),
+                val_len: value.len(),
+                access_count: 0,
+            },
+        );
+        if self.local_lru.len() > self.local_capacity {
+            self.evict_one(ctx)?;
+        }
+        Ok(())
+    }
+
+    /// Listing 3 GET: search local, then remote; remote-hit behaviour per
+    /// policy. Returns `None` on miss (paper returns NULL).
+    pub fn get(&mut self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.stats.gets += 1;
+        let (tier, access_count) = match self.index.get_mut(key) {
+            Some(e) => {
+                e.access_count += 1;
+                (e.tier, e.access_count)
+            }
+            None => {
+                self.stats.misses += 1;
+                return Ok(None);
+            }
+        };
+        match tier {
+            Tier::Local => {
+                self.stats.local_hits += 1;
+                let e = self.index.get(key).unwrap();
+                let token = e.token;
+                let value = Self::read_value(ctx, e)?;
+                if self.refresh_on_get {
+                    self.local_lru.move_to_front(token);
+                }
+                Ok(Some(value))
+            }
+            Tier::Remote => {
+                self.stats.remote_hits += 1;
+                if self.policy.promote_on_get(access_count) {
+                    self.promote(ctx, key)?;
+                } else {
+                    let token = self.index.get(key).unwrap().token;
+                    self.remote_lru.move_to_front(token);
+                }
+                let e = self.index.get(key).unwrap();
+                Ok(Some(Self::read_value(ctx, e)?))
+            }
+        }
+    }
+
+    fn delete_inner(&mut self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<bool> {
+        match self.index.remove(key) {
+            Some(e) => {
+                match e.tier {
+                    Tier::Local => {
+                        self.local_lru.remove(e.token);
+                    }
+                    Tier::Remote => {
+                        self.remote_lru.remove(e.token);
+                    }
+                }
+                ctx.free_sized(e.addr, e.obj_size())?;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Listing 4 DELETE: search both tiers, free the object.
+    pub fn delete(&mut self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<bool> {
+        self.stats.deletes += 1;
+        self.delete_inner(ctx, key)
+    }
+
+    /// Where a key currently lives (diagnostics / tests).
+    pub fn tier_of(&self, key: &[u8]) -> Option<&'static str> {
+        self.index.get(key).map(|e| match e.tier {
+            Tier::Local => "local",
+            Tier::Remote => "remote",
+        })
+    }
+
+    /// Drop every object (frees all emucxl memory owned by the store).
+    pub fn clear(&mut self, ctx: &mut EmucxlContext) -> Result<()> {
+        let keys: Vec<Vec<u8>> = self.index.keys().cloned().collect();
+        for k in keys {
+            self.delete_inner(ctx, &k)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EmucxlConfig;
+
+    fn ctx() -> EmucxlContext {
+        EmucxlContext::init(EmucxlConfig::sized(8 << 20, 32 << 20)).unwrap()
+    }
+
+    fn store(cap: usize, policy: GetPolicy) -> KvStore {
+        KvStore::new(cap, policy)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut c = ctx();
+        let mut kv = store(10, GetPolicy::InPlace);
+        kv.put(&mut c, b"alpha", b"one").unwrap();
+        kv.put(&mut c, b"beta", b"two").unwrap();
+        assert_eq!(kv.get(&mut c, b"alpha").unwrap(), Some(b"one".to_vec()));
+        assert_eq!(kv.get(&mut c, b"beta").unwrap(), Some(b"two".to_vec()));
+        assert_eq!(kv.get(&mut c, b"gamma").unwrap(), None);
+        assert_eq!(kv.stats().misses, 1);
+        assert_eq!(kv.stats().local_hits, 2);
+    }
+
+    #[test]
+    fn eviction_to_remote_in_lru_order() {
+        let mut c = ctx();
+        let mut kv = store(2, GetPolicy::InPlace);
+        kv.put(&mut c, b"a", b"1").unwrap();
+        kv.put(&mut c, b"b", b"2").unwrap();
+        kv.put(&mut c, b"c", b"3").unwrap(); // evicts "a" (LRU)
+        assert_eq!(kv.tier_of(b"a"), Some("remote"));
+        assert_eq!(kv.tier_of(b"b"), Some("local"));
+        assert_eq!(kv.tier_of(b"c"), Some("local"));
+        assert_eq!(kv.stats().evictions, 1);
+        assert_eq!(kv.local_count(), 2);
+        assert_eq!(kv.remote_count(), 1);
+        // data survives eviction
+        assert_eq!(kv.get(&mut c, b"a").unwrap(), Some(b"1".to_vec()));
+    }
+
+    #[test]
+    fn policy1_promotes_on_remote_get() {
+        let mut c = ctx();
+        let mut kv = store(2, GetPolicy::Promote);
+        kv.put(&mut c, b"a", b"1").unwrap();
+        kv.put(&mut c, b"b", b"2").unwrap();
+        kv.put(&mut c, b"c", b"3").unwrap(); // "a" -> remote
+        assert_eq!(kv.tier_of(b"a"), Some("remote"));
+        let v = kv.get(&mut c, b"a").unwrap().unwrap();
+        assert_eq!(v, b"1");
+        assert_eq!(kv.tier_of(b"a"), Some("local"), "Policy1 must promote");
+        assert_eq!(kv.stats().promotions, 1);
+        // promotion respected capacity: someone else went remote
+        assert_eq!(kv.local_count(), 2);
+        assert_eq!(kv.remote_count(), 1);
+    }
+
+    #[test]
+    fn policy2_leaves_object_remote() {
+        let mut c = ctx();
+        let mut kv = store(2, GetPolicy::InPlace);
+        kv.put(&mut c, b"a", b"1").unwrap();
+        kv.put(&mut c, b"b", b"2").unwrap();
+        kv.put(&mut c, b"c", b"3").unwrap();
+        let _ = kv.get(&mut c, b"a").unwrap().unwrap();
+        assert_eq!(kv.tier_of(b"a"), Some("remote"), "Policy2 must not move");
+        assert_eq!(kv.stats().promotions, 0);
+        assert_eq!(kv.stats().remote_hits, 1);
+    }
+
+    #[test]
+    fn update_existing_key_replaces_value() {
+        let mut c = ctx();
+        let mut kv = store(4, GetPolicy::InPlace);
+        kv.put(&mut c, b"k", b"old").unwrap();
+        kv.put(&mut c, b"k", b"newer-value").unwrap();
+        assert_eq!(kv.get(&mut c, b"k").unwrap(), Some(b"newer-value".to_vec()));
+        assert_eq!(kv.len(), 1);
+    }
+
+    #[test]
+    fn delete_from_both_tiers() {
+        let mut c = ctx();
+        let mut kv = store(1, GetPolicy::InPlace);
+        kv.put(&mut c, b"a", b"1").unwrap();
+        kv.put(&mut c, b"b", b"2").unwrap(); // "a" -> remote
+        assert!(kv.delete(&mut c, b"a").unwrap()); // remote delete
+        assert!(kv.delete(&mut c, b"b").unwrap()); // local delete
+        assert!(!kv.delete(&mut c, b"nope").unwrap());
+        assert_eq!(kv.len(), 0);
+        assert_eq!(c.live_allocations(), 0, "store must free emucxl memory");
+    }
+
+    #[test]
+    fn get_refreshes_lru_position() {
+        let mut c = ctx();
+        let mut kv = store(2, GetPolicy::InPlace);
+        kv.put(&mut c, b"a", b"1").unwrap();
+        kv.put(&mut c, b"b", b"2").unwrap();
+        // touch "a" so "b" becomes LRU
+        kv.get(&mut c, b"a").unwrap();
+        kv.put(&mut c, b"c", b"3").unwrap();
+        assert_eq!(kv.tier_of(b"b"), Some("remote"), "b was LRU after a's GET");
+        assert_eq!(kv.tier_of(b"a"), Some("local"));
+    }
+
+    #[test]
+    fn local_fraction_math() {
+        let mut c = ctx();
+        let mut kv = store(10, GetPolicy::InPlace);
+        kv.put(&mut c, b"x", b"v").unwrap();
+        kv.get(&mut c, b"x").unwrap();
+        kv.get(&mut c, b"nope").unwrap();
+        let s = kv.stats();
+        assert_eq!(s.gets, 2);
+        assert!((s.local_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn remote_get_costs_more_virtual_time_than_local() {
+        let mut c = ctx();
+        let mut kv = store(1, GetPolicy::InPlace);
+        kv.put(&mut c, b"local", &[7u8; 1024]).unwrap();
+        kv.put(&mut c, b"pushme", &[8u8; 1024]).unwrap(); // "local" -> remote
+        // now "pushme" is local, "local" is remote
+        let t0 = c.now_ns();
+        kv.get(&mut c, b"pushme").unwrap();
+        let t_local = c.now_ns() - t0;
+        let t1 = c.now_ns();
+        kv.get(&mut c, b"local").unwrap();
+        let t_remote = c.now_ns() - t1;
+        assert!(t_remote > t_local, "remote {t_remote} vs local {t_local}");
+    }
+
+    #[test]
+    fn clear_releases_everything() {
+        let mut c = ctx();
+        let mut kv = store(2, GetPolicy::Promote);
+        for i in 0..10u32 {
+            kv.put(&mut c, &i.to_le_bytes(), b"value").unwrap();
+        }
+        kv.clear(&mut c).unwrap();
+        assert!(kv.is_empty());
+        assert_eq!(c.live_allocations(), 0);
+    }
+
+    #[test]
+    fn promote_after_n_defers_promotion() {
+        let mut c = ctx();
+        let mut kv = store(1, GetPolicy::PromoteAfter(3));
+        kv.put(&mut c, b"a", b"1").unwrap();
+        kv.put(&mut c, b"b", b"2").unwrap(); // "a" -> remote
+        // first two remote GETs read in place
+        kv.get(&mut c, b"a").unwrap();
+        assert_eq!(kv.tier_of(b"a"), Some("remote"));
+        kv.get(&mut c, b"a").unwrap();
+        assert_eq!(kv.tier_of(b"a"), Some("remote"));
+        // third access crosses the threshold
+        kv.get(&mut c, b"a").unwrap();
+        assert_eq!(kv.tier_of(b"a"), Some("local"));
+        assert_eq!(kv.stats().promotions, 1);
+    }
+
+    #[test]
+    fn empty_key_rejected() {
+        let mut c = ctx();
+        let mut kv = store(2, GetPolicy::Promote);
+        assert!(kv.put(&mut c, b"", b"v").is_err());
+    }
+}

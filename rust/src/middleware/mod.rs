@@ -1,0 +1,4 @@
+//! Middleware built on the emucxl API (paper §IV): queue, KV store, slab.
+pub mod queue;
+pub mod kv;
+pub mod slab;

@@ -1,0 +1,227 @@
+//! Direct-access use case: a queue in disaggregated memory (paper §IV-A,
+//! Listing 1).
+//!
+//! The queue is a singly linked list whose nodes live in emucxl memory;
+//! each enqueue allocates a node with `emucxl_alloc`, each dequeue frees it
+//! with `emucxl_free` — exactly the paper's Listing 1, with the node
+//! placement policy chosen at queue construction (all-local or all-remote,
+//! extendable to mixed policies).
+//!
+//! Node layout in emulated memory (little-endian):
+//! `[ data: i64 | next: u64 ]` — 16 bytes.
+
+use crate::api::EmucxlContext;
+use crate::error::Result;
+use crate::mem::vaspace::VAddr;
+
+/// Placement policy for queue nodes (paper: chosen at init).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueuePolicy {
+    AllLocal,
+    AllRemote,
+}
+
+impl QueuePolicy {
+    fn node(self) -> u32 {
+        match self {
+            QueuePolicy::AllLocal => crate::api::NODE_LOCAL,
+            QueuePolicy::AllRemote => crate::api::NODE_REMOTE,
+        }
+    }
+}
+
+const NODE_SIZE: usize = 16;
+const NIL: u64 = 0;
+
+/// A FIFO queue whose nodes live in emucxl (dis)aggregated memory.
+#[derive(Debug)]
+pub struct EmucxlQueue {
+    policy: QueuePolicy,
+    front: u64,
+    rear: u64,
+    count: usize,
+}
+
+impl EmucxlQueue {
+    /// Listing 1 `initQueue`: choose local or remote placement up front.
+    pub fn new(policy: QueuePolicy) -> Self {
+        Self { policy, front: NIL, rear: NIL, count: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn policy(&self) -> QueuePolicy {
+        self.policy
+    }
+
+    fn write_node(ctx: &mut EmucxlContext, addr: VAddr, data: i64, next: u64) -> Result<()> {
+        let mut buf = [0u8; NODE_SIZE];
+        buf[..8].copy_from_slice(&data.to_le_bytes());
+        buf[8..].copy_from_slice(&next.to_le_bytes());
+        ctx.write(addr, &buf)?;
+        Ok(())
+    }
+
+    fn read_node(ctx: &mut EmucxlContext, addr: VAddr) -> Result<(i64, u64)> {
+        let mut buf = [0u8; NODE_SIZE];
+        ctx.read(addr, &mut buf)?;
+        let data = i64::from_le_bytes(buf[..8].try_into().unwrap());
+        let next = u64::from_le_bytes(buf[8..].try_into().unwrap());
+        Ok((data, next))
+    }
+
+    /// Listing 1 `enqueue`: `createNode` via emucxl_alloc + link at rear.
+    pub fn enqueue(&mut self, ctx: &mut EmucxlContext, data: i64) -> Result<()> {
+        let addr = ctx.alloc(NODE_SIZE, self.policy.node())?;
+        Self::write_node(ctx, addr, data, NIL)?;
+        if self.rear == NIL {
+            self.front = addr.0;
+            self.rear = addr.0;
+        } else {
+            // que->rear->next = newnode
+            let rear = VAddr(self.rear);
+            let (rdata, _) = Self::read_node(ctx, rear)?;
+            Self::write_node(ctx, rear, rdata, addr.0)?;
+            self.rear = addr.0;
+        }
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Listing 1 `dequeue`: unlink front + emucxl_free. Returns the value,
+    /// or `None` on an empty queue (the paper returns 0).
+    pub fn dequeue(&mut self, ctx: &mut EmucxlContext) -> Result<Option<i64>> {
+        if self.front == NIL {
+            return Ok(None);
+        }
+        let front = VAddr(self.front);
+        let (data, next) = Self::read_node(ctx, front)?;
+        self.front = next;
+        if self.front == NIL {
+            self.rear = NIL;
+        }
+        ctx.free_sized(front, NODE_SIZE)?;
+        self.count -= 1;
+        Ok(Some(data))
+    }
+
+    /// Non-destructive front peek.
+    pub fn peek(&self, ctx: &mut EmucxlContext) -> Result<Option<i64>> {
+        if self.front == NIL {
+            return Ok(None);
+        }
+        Ok(Some(Self::read_node(ctx, VAddr(self.front))?.0))
+    }
+
+    /// Queue destruction: free every node (paper: "queue destruction
+    /// operations involve deleting and freeing each node").
+    pub fn destroy(mut self, ctx: &mut EmucxlContext) -> Result<usize> {
+        let mut freed = 0;
+        while self.dequeue(ctx)?.is_some() {
+            freed += 1;
+        }
+        Ok(freed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
+    use crate::config::EmucxlConfig;
+
+    fn ctx() -> EmucxlContext {
+        EmucxlContext::init(EmucxlConfig::sized(4 << 20, 16 << 20)).unwrap()
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut c = ctx();
+        let mut q = EmucxlQueue::new(QueuePolicy::AllLocal);
+        for i in 0..100 {
+            q.enqueue(&mut c, i).unwrap();
+        }
+        assert_eq!(q.len(), 100);
+        for i in 0..100 {
+            assert_eq!(q.dequeue(&mut c).unwrap(), Some(i));
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.dequeue(&mut c).unwrap(), None);
+    }
+
+    #[test]
+    fn remote_queue_allocates_on_remote() {
+        let mut c = ctx();
+        let mut q = EmucxlQueue::new(QueuePolicy::AllRemote);
+        q.enqueue(&mut c, 7).unwrap();
+        assert_eq!(c.stats(NODE_REMOTE).unwrap().allocated_bytes, 16);
+        assert_eq!(c.stats(NODE_LOCAL).unwrap().allocated_bytes, 0);
+        q.dequeue(&mut c).unwrap();
+        assert_eq!(c.stats(NODE_REMOTE).unwrap().allocated_bytes, 0);
+    }
+
+    #[test]
+    fn interleaved_enqueue_dequeue() {
+        let mut c = ctx();
+        let mut q = EmucxlQueue::new(QueuePolicy::AllLocal);
+        q.enqueue(&mut c, 1).unwrap();
+        q.enqueue(&mut c, 2).unwrap();
+        assert_eq!(q.dequeue(&mut c).unwrap(), Some(1));
+        q.enqueue(&mut c, 3).unwrap();
+        assert_eq!(q.peek(&mut c).unwrap(), Some(2));
+        assert_eq!(q.dequeue(&mut c).unwrap(), Some(2));
+        assert_eq!(q.dequeue(&mut c).unwrap(), Some(3));
+        assert_eq!(q.dequeue(&mut c).unwrap(), None);
+    }
+
+    #[test]
+    fn destroy_frees_all_nodes() {
+        let mut c = ctx();
+        let mut q = EmucxlQueue::new(QueuePolicy::AllRemote);
+        for i in 0..50 {
+            q.enqueue(&mut c, i).unwrap();
+        }
+        let freed = q.destroy(&mut c).unwrap();
+        assert_eq!(freed, 50);
+        assert_eq!(c.live_allocations(), 0);
+    }
+
+    #[test]
+    fn remote_queue_costs_more_virtual_time() {
+        // The Table III observation, as a unit test.
+        let ops = 200;
+        let mut c_local = ctx();
+        let mut q = EmucxlQueue::new(QueuePolicy::AllLocal);
+        for i in 0..ops {
+            q.enqueue(&mut c_local, i).unwrap();
+        }
+        let local_ns = c_local.now_ns();
+
+        let mut c_remote = ctx();
+        let mut q = EmucxlQueue::new(QueuePolicy::AllRemote);
+        for i in 0..ops {
+            q.enqueue(&mut c_remote, i).unwrap();
+        }
+        let remote_ns = c_remote.now_ns();
+        assert!(
+            remote_ns > local_ns,
+            "remote {remote_ns} ns must exceed local {local_ns} ns"
+        );
+    }
+
+    #[test]
+    fn negative_values_roundtrip() {
+        let mut c = ctx();
+        let mut q = EmucxlQueue::new(QueuePolicy::AllLocal);
+        q.enqueue(&mut c, -42).unwrap();
+        q.enqueue(&mut c, i64::MIN).unwrap();
+        assert_eq!(q.dequeue(&mut c).unwrap(), Some(-42));
+        assert_eq!(q.dequeue(&mut c).unwrap(), Some(i64::MIN));
+    }
+}

@@ -1,0 +1,13 @@
+//! Slab-allocator middleware over emucxl memory (paper §IV-B).
+//!
+//! The paper describes this middleware (Application 3, Figure 4) and defers
+//! the implementation to future work — "While our current implementation
+//! does not include the slab allocator, we plan it for future release."
+//! This module is that release: a Bonwick-style slab allocator whose slabs
+//! are page-aligned emucxl allocations on a caller-chosen NUMA node, so
+//! applications get constant-time small-object allocation on disaggregated
+//! memory without per-object mmap round-trips.
+
+pub mod slab;
+
+pub use slab::{SlabAllocator, SlabStats};

@@ -1,0 +1,424 @@
+//! The slab allocator implementation.
+//!
+//! Size classes are powers of two from 16 B to 4 KiB; each slab is a
+//! page-aligned emucxl allocation (`SLAB_PAGES` pages) carved into
+//! equal-size chunks with a per-slab free list and reference count —
+//! the structure §IV-B describes ("one or more virtually contiguous
+//! memory pages ... divided into equal-sized chunks ... a reference count
+//! ... to track the number of allocated chunks"). Requests above the
+//! largest class fall through to `emucxl_alloc` directly.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::api::EmucxlContext;
+use crate::error::{EmucxlError, Result};
+use crate::mem::vaspace::VAddr;
+
+/// Pages per slab (16 KiB slabs with the default 4 KiB pages).
+pub const SLAB_PAGES: usize = 4;
+
+/// Smallest / largest size class (bytes).
+pub const MIN_CLASS: usize = 16;
+pub const MAX_CLASS: usize = 4096;
+
+fn class_of(size: usize) -> Option<usize> {
+    if size > MAX_CLASS {
+        return None;
+    }
+    Some(size.max(MIN_CLASS).next_power_of_two())
+}
+
+#[derive(Debug)]
+struct Slab {
+    base: VAddr,
+    node: u32,
+    chunk: usize,
+    chunks: usize,
+    free: Vec<u32>,
+    used: usize,
+}
+
+impl Slab {
+    fn bytes(&self) -> usize {
+        self.chunk * self.chunks
+    }
+}
+
+/// Allocator statistics (ablation A2 prints these).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SlabStats {
+    pub slabs: usize,
+    pub slab_bytes: usize,
+    pub used_bytes: usize,
+    pub large_allocs: usize,
+    pub alloc_calls: u64,
+    pub free_calls: u64,
+    /// emucxl_alloc calls actually issued (slab creations + large allocs).
+    pub backend_allocs: u64,
+}
+
+impl SlabStats {
+    /// Fraction of slab bytes actually handed out.
+    pub fn utilization(&self) -> f64 {
+        if self.slab_bytes == 0 {
+            0.0
+        } else {
+            self.used_bytes as f64 / self.slab_bytes as f64
+        }
+    }
+}
+
+/// Slab allocator over emucxl memory. One instance manages both nodes.
+#[derive(Debug, Default)]
+pub struct SlabAllocator {
+    slabs: Vec<Option<Slab>>,
+    /// (node, class) -> slab ids with at least one free chunk.
+    partial: HashMap<(u32, usize), Vec<usize>>,
+    /// slab base address -> slab id (range lookup on free()).
+    by_base: BTreeMap<u64, usize>,
+    /// large allocations served directly by emucxl_alloc.
+    large: HashMap<u64, usize>,
+    stats: SlabStats,
+    slab_bytes: usize,
+}
+
+impl SlabAllocator {
+    pub fn new() -> Self {
+        Self { slab_bytes: 0, ..Self::default() }
+    }
+
+    pub fn stats(&self) -> SlabStats {
+        let mut s = self.stats;
+        s.slabs = self.by_base.len();
+        s.slab_bytes = self.slab_bytes;
+        s.large_allocs = self.large.len();
+        s
+    }
+
+    fn new_slab(&mut self, ctx: &mut EmucxlContext, node: u32, chunk: usize) -> Result<usize> {
+        let bytes = SLAB_PAGES * ctx.device().page_size();
+        let base = ctx.alloc(bytes, node)?;
+        self.stats.backend_allocs += 1;
+        let chunks = bytes / chunk;
+        let slab = Slab {
+            base,
+            node,
+            chunk,
+            chunks,
+            free: (0..chunks as u32).rev().collect(),
+            used: 0,
+        };
+        self.slab_bytes += slab.bytes();
+        let id = self.slabs.len();
+        self.by_base.insert(base.0, id);
+        self.slabs.push(Some(slab));
+        self.partial.entry((node, chunk)).or_default().push(id);
+        Ok(id)
+    }
+
+    /// Allocate `size` bytes on `node`. Small sizes come from slabs;
+    /// sizes above [`MAX_CLASS`] go straight to `emucxl_alloc`.
+    pub fn alloc(&mut self, ctx: &mut EmucxlContext, size: usize, node: u32) -> Result<VAddr> {
+        if size == 0 {
+            return Err(EmucxlError::InvalidArgument("slab alloc of 0 bytes".into()));
+        }
+        self.stats.alloc_calls += 1;
+        let chunk = match class_of(size) {
+            None => {
+                let addr = ctx.alloc(size, node)?;
+                self.stats.backend_allocs += 1;
+                self.large.insert(addr.0, size);
+                return Ok(addr);
+            }
+            Some(c) => c,
+        };
+        let key = (node, chunk);
+        // Find (or create) a slab with room.
+        let id = loop {
+            match self.partial.get_mut(&key).and_then(|v| v.last().copied()) {
+                Some(id) if self.slabs[id].as_ref().is_some_and(|s| !s.free.is_empty()) => {
+                    break id
+                }
+                Some(_) => {
+                    self.partial.get_mut(&key).unwrap().pop();
+                }
+                None => break self.new_slab(ctx, node, chunk)?,
+            }
+        };
+        let slab = self.slabs[id].as_mut().unwrap();
+        let idx = slab.free.pop().expect("partial slab has free chunk");
+        slab.used += 1;
+        self.stats.used_bytes += chunk;
+        if slab.free.is_empty() {
+            // fully used: drop from the partial stack
+            if let Some(v) = self.partial.get_mut(&key) {
+                v.retain(|&s| s != id);
+            }
+        }
+        Ok(slab.base.offset(idx as u64 * chunk as u64))
+    }
+
+    /// Free an address previously returned by [`Self::alloc`]. Empty slabs
+    /// are returned to emucxl (one empty slab per class is kept warm).
+    pub fn free(&mut self, ctx: &mut EmucxlContext, addr: VAddr) -> Result<()> {
+        self.stats.free_calls += 1;
+        if let Some(size) = self.large.remove(&addr.0) {
+            ctx.free_sized(addr, size)?;
+            return Ok(());
+        }
+        // Range lookup: the slab whose base is the greatest <= addr.
+        let (&base, &id) = self
+            .by_base
+            .range(..=addr.0)
+            .next_back()
+            .ok_or(EmucxlError::BadAddress(addr.0))?;
+        let slab = self.slabs[id].as_mut().ok_or(EmucxlError::BadAddress(addr.0))?;
+        let off = addr.0 - base;
+        if off >= slab.bytes() as u64 {
+            return Err(EmucxlError::BadAddress(addr.0));
+        }
+        if off % slab.chunk as u64 != 0 {
+            return Err(EmucxlError::InvalidArgument(format!(
+                "address {addr} not chunk-aligned"
+            )));
+        }
+        let idx = (off / slab.chunk as u64) as u32;
+        if slab.free.contains(&idx) {
+            return Err(EmucxlError::InvalidArgument(format!(
+                "double free of chunk {idx} in slab {base:#x}"
+            )));
+        }
+        slab.free.push(idx);
+        slab.used -= 1;
+        self.stats.used_bytes -= slab.chunk;
+        let key = (slab.node, slab.chunk);
+        if slab.used == 0 {
+            // Reclaim if another empty slab of this class already exists.
+            let empties = self
+                .partial
+                .get(&key)
+                .map(|v| {
+                    v.iter()
+                        .filter(|&&s| {
+                            s != id && self.slabs[s].as_ref().is_some_and(|sl| sl.used == 0)
+                        })
+                        .count()
+                })
+                .unwrap_or(0);
+            if empties >= 1 {
+                let slab = self.slabs[id].take().unwrap();
+                self.slab_bytes -= slab.bytes();
+                self.by_base.remove(&base);
+                if let Some(v) = self.partial.get_mut(&key) {
+                    v.retain(|&s| s != id);
+                }
+                ctx.free(slab.base)?;
+                return Ok(());
+            }
+        }
+        // Slab regained space: make sure it is findable.
+        let v = self.partial.entry(key).or_default();
+        if !v.contains(&id) {
+            v.push(id);
+        }
+        Ok(())
+    }
+
+    /// Tear down: release every slab and large allocation.
+    pub fn destroy(mut self, ctx: &mut EmucxlContext) -> Result<()> {
+        for (&base, _) in self.large.iter() {
+            let size = self.large[&base];
+            ctx.free_sized(VAddr(base), size)?;
+        }
+        self.large.clear();
+        for slab in self.slabs.iter_mut().filter_map(|s| s.take()) {
+            ctx.free(slab.base)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{NODE_LOCAL, NODE_REMOTE};
+    use crate::config::EmucxlConfig;
+    use crate::util::rng::Rng;
+
+    fn ctx() -> EmucxlContext {
+        EmucxlContext::init(EmucxlConfig::sized(8 << 20, 32 << 20)).unwrap()
+    }
+
+    #[test]
+    fn size_classes() {
+        assert_eq!(class_of(1), Some(16));
+        assert_eq!(class_of(16), Some(16));
+        assert_eq!(class_of(17), Some(32));
+        assert_eq!(class_of(4096), Some(4096));
+        assert_eq!(class_of(4097), None);
+    }
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let a = s.alloc(&mut c, 100, NODE_LOCAL).unwrap();
+        c.write(a, &[42; 100]).unwrap();
+        let mut buf = [0u8; 100];
+        c.read(a, &mut buf).unwrap();
+        assert_eq!(buf, [42; 100]);
+        s.free(&mut c, a).unwrap();
+    }
+
+    #[test]
+    fn many_small_allocs_share_one_backend_mmap() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let mut addrs = vec![];
+        // 16 KiB slab / 64 B chunks = 256 chunks per backend alloc
+        for _ in 0..256 {
+            addrs.push(s.alloc(&mut c, 64, NODE_LOCAL).unwrap());
+        }
+        assert_eq!(s.stats().backend_allocs, 1, "one slab should cover all");
+        // chunk 257 forces a second slab
+        s.alloc(&mut c, 64, NODE_LOCAL).unwrap();
+        assert_eq!(s.stats().backend_allocs, 2);
+        // all addresses distinct
+        let mut sorted: Vec<u64> = addrs.iter().map(|a| a.0).collect();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 256);
+    }
+
+    #[test]
+    fn chunks_do_not_overlap() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let a = s.alloc(&mut c, 128, NODE_REMOTE).unwrap();
+        let b = s.alloc(&mut c, 128, NODE_REMOTE).unwrap();
+        c.write(a, &[0xAA; 128]).unwrap();
+        c.write(b, &[0xBB; 128]).unwrap();
+        let mut buf = [0u8; 128];
+        c.read(a, &mut buf).unwrap();
+        assert_eq!(buf, [0xAA; 128]);
+    }
+
+    #[test]
+    fn freed_chunk_is_reused() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let a = s.alloc(&mut c, 64, NODE_LOCAL).unwrap();
+        s.free(&mut c, a).unwrap();
+        let b = s.alloc(&mut c, 64, NODE_LOCAL).unwrap();
+        assert_eq!(a, b, "LIFO free list should hand back the same chunk");
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let a = s.alloc(&mut c, 64, NODE_LOCAL).unwrap();
+        s.free(&mut c, a).unwrap();
+        assert!(s.free(&mut c, a).is_err());
+    }
+
+    #[test]
+    fn misaligned_free_rejected() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let a = s.alloc(&mut c, 64, NODE_LOCAL).unwrap();
+        assert!(s.free(&mut c, a.offset(1)).is_err());
+    }
+
+    #[test]
+    fn large_allocations_bypass_slabs() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let a = s.alloc(&mut c, 100_000, NODE_REMOTE).unwrap();
+        assert_eq!(s.stats().large_allocs, 1);
+        c.write(a, &[1; 100_000]).unwrap();
+        s.free(&mut c, a).unwrap();
+        assert_eq!(s.stats().large_allocs, 0);
+    }
+
+    #[test]
+    fn nodes_get_separate_slabs() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let a = s.alloc(&mut c, 64, NODE_LOCAL).unwrap();
+        let b = s.alloc(&mut c, 64, NODE_REMOTE).unwrap();
+        assert!(c.is_local(a).unwrap());
+        assert!(!c.is_local(b).unwrap());
+        assert_eq!(s.stats().backend_allocs, 2);
+    }
+
+    #[test]
+    fn empty_slab_reclaimed_when_duplicate() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        // Fill two slabs of the same class.
+        let mut addrs = vec![];
+        for _ in 0..512 {
+            addrs.push(s.alloc(&mut c, 64, NODE_LOCAL).unwrap());
+        }
+        assert_eq!(s.stats().slabs, 2);
+        // Free everything: one empty slab stays warm, the other is
+        // returned to emucxl.
+        for a in addrs {
+            s.free(&mut c, a).unwrap();
+        }
+        assert_eq!(s.stats().slabs, 1, "duplicate empty slab must be reclaimed");
+        assert_eq!(s.stats().used_bytes, 0);
+    }
+
+    #[test]
+    fn utilization_math() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let _a = s.alloc(&mut c, 4096, NODE_LOCAL).unwrap();
+        let st = s.stats();
+        // one 16 KiB slab, one 4 KiB chunk used
+        assert!((st.utilization() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn destroy_releases_all_memory() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        for i in 0..100 {
+            s.alloc(&mut c, 16 + (i % 200), NODE_LOCAL).unwrap();
+        }
+        s.alloc(&mut c, 1 << 20, NODE_REMOTE).unwrap();
+        s.destroy(&mut c).unwrap();
+        assert_eq!(c.live_allocations(), 0);
+    }
+
+    #[test]
+    fn randomized_alloc_free_stress() {
+        let mut c = ctx();
+        let mut s = SlabAllocator::new();
+        let mut rng = Rng::new(4242);
+        let mut live: Vec<(VAddr, u8)> = Vec::new();
+        for step in 0..3000 {
+            if rng.chance(0.6) || live.is_empty() {
+                let size = 1 + rng.index(5000);
+                let node = if rng.chance(0.5) { NODE_LOCAL } else { NODE_REMOTE };
+                let a = s.alloc(&mut c, size, node).unwrap();
+                let tag = (step % 251) as u8;
+                c.write(a, &[tag]).unwrap();
+                live.push((a, tag));
+            } else {
+                let i = rng.index(live.len());
+                let (a, tag) = live.swap_remove(i);
+                let mut b = [0u8; 1];
+                c.read(a, &mut b).unwrap();
+                assert_eq!(b[0], tag, "chunk content corrupted");
+                s.free(&mut c, a).unwrap();
+            }
+        }
+        for (a, _) in live {
+            s.free(&mut c, a).unwrap();
+        }
+        assert_eq!(s.stats().used_bytes, 0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Typed wrappers around the compiled PJRT executables.
+//!
+//! Each wrapper owns one `PjRtLoadedExecutable`, knows the entry shapes it
+//! was lowered with, validates inputs, marshals `f32` buffers to/from
+//! `xla::Literal`s and unwraps the `return_tuple=True` output tuples.
+
+use crate::error::{EmucxlError, Result};
+use crate::timing::desc::AccessDesc;
+use crate::timing::model::{TimingParams, NUM_PARAMS};
+
+fn xerr(e: xla::Error) -> EmucxlError {
+    EmucxlError::Xla(e.to_string())
+}
+
+fn params_literal(params: &TimingParams) -> xla::Literal {
+    xla::Literal::vec1(&params.to_vec())
+}
+
+fn desc_literal(rows: &[[f32; 4]], batch: usize) -> Result<xla::Literal> {
+    debug_assert_eq!(rows.len(), batch);
+    let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+    xla::Literal::vec1(&flat).reshape(&[batch as i64, 4]).map_err(xerr)
+}
+
+/// Encode + zero-pad descriptors to the artifact batch size.
+pub fn encode_padded(descs: &[AccessDesc], batch: usize) -> Result<Vec<[f32; 4]>> {
+    if descs.len() > batch {
+        return Err(EmucxlError::InvalidArgument(format!(
+            "{} descriptors exceed artifact batch {batch}",
+            descs.len()
+        )));
+    }
+    let mut rows = Vec::with_capacity(batch);
+    rows.extend(descs.iter().map(|d| d.encode()));
+    rows.resize(batch, AccessDesc::pad());
+    Ok(rows)
+}
+
+/// Hot-path artifact: `f32[B,4], f32[16] -> (f32[B],)`.
+pub struct LatencyBatchExec {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+}
+
+impl LatencyBatchExec {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable, batch: usize) -> Self {
+        Self { exe, batch }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Run up to `batch` descriptors; returns one latency per input
+    /// descriptor (padding rows are computed by XLA but dropped here).
+    pub fn run(&self, descs: &[AccessDesc], params: &TimingParams) -> Result<Vec<f32>> {
+        let rows = encode_padded(descs, self.batch)?;
+        let lits = self.run_raw(&rows, params)?;
+        Ok(lits[..descs.len()].to_vec())
+    }
+
+    /// Run a pre-encoded full batch (no padding logic) — bench hot path.
+    pub fn run_raw(&self, rows: &[[f32; 4]], params: &TimingParams) -> Result<Vec<f32>> {
+        let desc = desc_literal(rows, self.batch)?;
+        let p = params_literal(params);
+        let result = self.exe.execute::<xla::Literal>(&[desc, p]).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let out = result.to_tuple1().map_err(xerr)?;
+        out.to_vec::<f32>().map_err(xerr)
+    }
+}
+
+/// Analytics artifact: `f32[W,B,4], f32[16], f32[] ->
+/// (f32[W,B], f32[], f32[4])`.
+pub struct WindowExec {
+    exe: xla::PjRtLoadedExecutable,
+    window: usize,
+    batch: usize,
+}
+
+/// Output of one window evaluation.
+#[derive(Debug, Clone)]
+pub struct WindowOut {
+    /// Per-access latencies, row-major `[window][batch]`.
+    pub latencies: Vec<f32>,
+    /// Link-queue occupancy (flits) to carry into the next window.
+    pub final_occ: f32,
+    /// `[total_ns, max_ns, local_bytes, remote_bytes]`.
+    pub summary: [f32; 4],
+}
+
+impl WindowExec {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable, window: usize, batch: usize) -> Self {
+        Self { exe, window, batch }
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Evaluate one window of `window * batch` encoded descriptor rows.
+    pub fn run(
+        &self,
+        rows: &[[f32; 4]],
+        params: &TimingParams,
+        init_occ: f32,
+    ) -> Result<WindowOut> {
+        let want = self.window * self.batch;
+        if rows.len() != want {
+            return Err(EmucxlError::InvalidArgument(format!(
+                "window artifact wants {want} rows, got {}",
+                rows.len()
+            )));
+        }
+        let flat: Vec<f32> = rows.iter().flatten().copied().collect();
+        let descs = xla::Literal::vec1(&flat)
+            .reshape(&[self.window as i64, self.batch as i64, 4])
+            .map_err(xerr)?;
+        let p = params_literal(params);
+        let occ = xla::Literal::scalar(init_occ);
+        let result = self.exe.execute::<xla::Literal>(&[descs, p, occ]).map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        let (lat, occ, summary) = result.to_tuple3().map_err(xerr)?;
+        let latencies = lat.to_vec::<f32>().map_err(xerr)?;
+        let final_occ = occ.to_vec::<f32>().map_err(xerr)?[0];
+        let s = summary.to_vec::<f32>().map_err(xerr)?;
+        if s.len() != 4 {
+            return Err(EmucxlError::Xla(format!("summary len {}", s.len())));
+        }
+        Ok(WindowOut { latencies, final_occ, summary: [s[0], s[1], s[2], s[3]] })
+    }
+}
+
+/// Calibration artifact: `f32[16], f32[B,4], f32[B], f32[] ->
+/// (f32[], f32[16])`.
+pub struct CalibExec {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+}
+
+impl CalibExec {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable, batch: usize) -> Self {
+        Self { exe, batch }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// One gradient step: returns (loss, updated params).
+    pub fn step(
+        &self,
+        params: &TimingParams,
+        descs: &[AccessDesc],
+        observed_ns: &[f32],
+        lr: f32,
+    ) -> Result<(f32, TimingParams)> {
+        if descs.len() != self.batch || observed_ns.len() != self.batch {
+            return Err(EmucxlError::InvalidArgument(format!(
+                "calibration wants exactly {} samples",
+                self.batch
+            )));
+        }
+        let rows: Vec<[f32; 4]> = descs.iter().map(|d| d.encode()).collect();
+        let desc = desc_literal(&rows, self.batch)?;
+        let obs = xla::Literal::vec1(observed_ns);
+        let p = params_literal(params);
+        let lr = xla::Literal::scalar(lr);
+        let result = self.exe.execute::<xla::Literal>(&[p, desc, obs, lr]).map_err(xerr)?[0]
+            [0]
+        .to_literal_sync()
+        .map_err(xerr)?;
+        let (loss, new_p) = result.to_tuple2().map_err(xerr)?;
+        let loss = loss.to_vec::<f32>().map_err(xerr)?[0];
+        let pv = new_p.to_vec::<f32>().map_err(xerr)?;
+        if pv.len() != NUM_PARAMS {
+            return Err(EmucxlError::Xla(format!("params len {}", pv.len())));
+        }
+        let tp = TimingParams::from_vec(&pv)
+            .ok_or_else(|| EmucxlError::Xla("params decode".into()))?;
+        Ok((loss, tp))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_padded_pads_with_zero_rows() {
+        let descs = vec![AccessDesc::read(1, 64)];
+        let rows = encode_padded(&descs, 4).unwrap();
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0], AccessDesc::read(1, 64).encode());
+        assert_eq!(rows[1], [0.0; 4]);
+    }
+
+    #[test]
+    fn encode_padded_rejects_overflow() {
+        let descs = vec![AccessDesc::read(1, 64); 5];
+        assert!(encode_padded(&descs, 4).is_err());
+    }
+
+    #[test]
+    fn encode_padded_exact_fit() {
+        let descs = vec![AccessDesc::write(0, 8); 4];
+        let rows = encode_padded(&descs, 4).unwrap();
+        assert!(rows.iter().all(|r| *r == AccessDesc::write(0, 8).encode()));
+    }
+}

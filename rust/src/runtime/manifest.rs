@@ -1,0 +1,140 @@
+//! Parser for `artifacts/manifest.txt` (plain `key=value` lines written by
+//! `python/compile/aot.py`) — the contract between the AOT pipeline and the
+//! Rust runtime: batch size, window length, parameter count, file names and
+//! the default parameter vector.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{EmucxlError, Result};
+use crate::timing::model::NUM_PARAMS;
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    kv: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            EmucxlError::Artifact(format!(
+                "cannot read {} ({e}) — run `make artifacts`",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = HashMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                EmucxlError::Artifact(format!("manifest line {} not key=value", i + 1))
+            })?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let m = Self { kv };
+        // Validate the required keys eagerly so failures happen at load.
+        m.batch()?;
+        m.window()?;
+        let np: usize = m.parse_num("num_params")?;
+        if np != NUM_PARAMS {
+            return Err(EmucxlError::Artifact(format!(
+                "manifest num_params={np} but runtime expects {NUM_PARAMS}; re-run `make artifacts`"
+            )));
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    fn parse_num<T: std::str::FromStr>(&self, key: &str) -> Result<T> {
+        self.get(key)
+            .ok_or_else(|| EmucxlError::Artifact(format!("manifest missing '{key}'")))?
+            .parse()
+            .map_err(|_| EmucxlError::Artifact(format!("manifest '{key}' not a number")))
+    }
+
+    /// Batch size the latency/calib artifacts were lowered with.
+    pub fn batch(&self) -> Result<usize> {
+        self.parse_num("batch")
+    }
+
+    /// Window length of the scan artifact.
+    pub fn window(&self) -> Result<usize> {
+        self.parse_num("window")
+    }
+
+    /// Default parameter vector recorded at lowering time.
+    pub fn default_params(&self) -> Result<Vec<f32>> {
+        let s = self
+            .get("default_params")
+            .ok_or_else(|| EmucxlError::Artifact("manifest missing default_params".into()))?;
+        let v: std::result::Result<Vec<f32>, _> =
+            s.split(',').map(|x| x.trim().parse::<f32>()).collect();
+        let v = v.map_err(|_| EmucxlError::Artifact("bad default_params".into()))?;
+        if v.len() != NUM_PARAMS {
+            return Err(EmucxlError::Artifact(format!(
+                "default_params has {} entries, expected {NUM_PARAMS}",
+                v.len()
+            )));
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "batch=256\nwindow=16\nnum_params=16\n\
+latency_batch=latency_batch.hlo.txt\n\
+default_params=80.0,250.0,100.0,32.0,64.0,2.0,10.0,1.1,1.0,0.0,300.0,512.0,0.01,4096.0,1.0,0.0\n";
+
+    #[test]
+    fn parses_good_manifest() {
+        let m = Manifest::parse(GOOD).unwrap();
+        assert_eq!(m.batch().unwrap(), 256);
+        assert_eq!(m.window().unwrap(), 16);
+        assert_eq!(m.get("latency_batch"), Some("latency_batch.hlo.txt"));
+        let p = m.default_params().unwrap();
+        assert_eq!(p.len(), 16);
+        assert_eq!(p[1], 250.0);
+    }
+
+    #[test]
+    fn missing_batch_rejected() {
+        assert!(Manifest::parse("window=16\nnum_params=16\n").is_err());
+    }
+
+    #[test]
+    fn wrong_num_params_rejected() {
+        let r = Manifest::parse("batch=256\nwindow=16\nnum_params=8\n");
+        assert!(matches!(r, Err(EmucxlError::Artifact(_))));
+    }
+
+    #[test]
+    fn malformed_line_rejected() {
+        assert!(Manifest::parse("batch=256\nwindow=16\nnum_params=16\nnonsense\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let m = Manifest::parse("# hi\n\nbatch=4\nwindow=2\nnum_params=16\n").unwrap();
+        assert_eq!(m.batch().unwrap(), 4);
+    }
+
+    #[test]
+    fn truncated_default_params_rejected() {
+        let m = Manifest::parse("batch=4\nwindow=2\nnum_params=16\ndefault_params=1.0,2.0\n")
+            .unwrap();
+        assert!(m.default_params().is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are HLO **text** produced by `python/compile/aot.py` (text is
+//! the only interchange format xla_extension 0.5.1 accepts from jax ≥ 0.5).
+//!
+//! One [`XlaRuntime`] per process; executables are compiled once at load
+//! and reused on the hot path. Python is never involved at runtime.
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::{CalibExec, LatencyBatchExec, WindowExec};
+pub use manifest::Manifest;
+
+use std::path::Path;
+
+use crate::error::{EmucxlError, Result};
+
+/// Process-wide PJRT CPU client plus the compiled emucxl executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: std::path::PathBuf,
+}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("platform", &self.client.platform_name())
+            .field("dir", &self.dir)
+            .finish()
+    }
+}
+
+fn xerr(e: xla::Error) -> EmucxlError {
+    EmucxlError::Xla(e.to_string())
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory (built by `make artifacts`) and start a
+    /// PJRT CPU client.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu().map_err(xerr)?;
+        Ok(Self { client, manifest, dir })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text artifact by manifest key.
+    fn compile(&self, key: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let file = self.manifest.get(key).ok_or_else(|| {
+            EmucxlError::Artifact(format!("manifest has no entry '{key}'"))
+        })?;
+        let path = self.dir.join(file);
+        if !path.exists() {
+            return Err(EmucxlError::Artifact(format!(
+                "artifact {} missing — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| EmucxlError::Artifact("non-utf8 path".into()))?,
+        )
+        .map_err(xerr)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(xerr)
+    }
+
+    /// Load the hot-path latency artifact.
+    pub fn latency_batch(&self) -> Result<LatencyBatchExec> {
+        Ok(LatencyBatchExec::new(self.compile("latency_batch")?, self.manifest.batch()?))
+    }
+
+    /// Load the window (scan) analytics artifact.
+    pub fn window_model(&self) -> Result<WindowExec> {
+        Ok(WindowExec::new(
+            self.compile("window_model")?,
+            self.manifest.window()?,
+            self.manifest.batch()?,
+        ))
+    }
+
+    /// Load the calibration-step artifact.
+    pub fn calib_step(&self) -> Result<CalibExec> {
+        Ok(CalibExec::new(self.compile("calib_step")?, self.manifest.batch()?))
+    }
+}

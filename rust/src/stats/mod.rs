@@ -1,0 +1,169 @@
+//! Telemetry: per-class latency histograms and byte/op counters.
+//!
+//! Tracks what `emucxl_stats` reports plus the latency distributions the
+//! benches print (Table III's mean/σ are computed from these).
+
+use crate::timing::desc::{AccessDesc, Op};
+use crate::util::hist::LatencyHistogram;
+
+/// Access classes tracked separately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessClass {
+    LocalRead,
+    LocalWrite,
+    RemoteRead,
+    RemoteWrite,
+    Mmio,
+}
+
+impl AccessClass {
+    pub fn of(desc: &AccessDesc) -> Self {
+        match (desc.op, desc.node) {
+            (Op::Mmio, _) => Self::Mmio,
+            (Op::Read, 0) => Self::LocalRead,
+            (Op::Write, 0) => Self::LocalWrite,
+            (Op::Read, _) => Self::RemoteRead,
+            (Op::Write, _) => Self::RemoteWrite,
+        }
+    }
+
+    pub const ALL: [Self; 5] =
+        [Self::LocalRead, Self::LocalWrite, Self::RemoteRead, Self::RemoteWrite, Self::Mmio];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::LocalRead => "local_read",
+            Self::LocalWrite => "local_write",
+            Self::RemoteRead => "remote_read",
+            Self::RemoteWrite => "remote_write",
+            Self::Mmio => "mmio",
+        }
+    }
+}
+
+/// Aggregated emulator telemetry.
+#[derive(Debug, Default)]
+pub struct Telemetry {
+    hists: [LatencyHistogram; 5],
+    bytes: [u64; 5],
+    ops: [u64; 5],
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn idx(class: AccessClass) -> usize {
+        AccessClass::ALL.iter().position(|&c| c == class).unwrap()
+    }
+
+    pub fn record(&mut self, desc: &AccessDesc, latency_ns: f32) {
+        let i = Self::idx(AccessClass::of(desc));
+        self.hists[i].record(latency_ns.max(0.0) as u64);
+        self.bytes[i] += desc.bytes;
+        self.ops[i] += 1;
+    }
+
+    pub fn hist(&self, class: AccessClass) -> &LatencyHistogram {
+        &self.hists[Self::idx(class)]
+    }
+
+    pub fn ops(&self, class: AccessClass) -> u64 {
+        self.ops[Self::idx(class)]
+    }
+
+    pub fn bytes(&self, class: AccessClass) -> u64 {
+        self.bytes[Self::idx(class)]
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.ops.iter().sum()
+    }
+
+    /// Total virtual ns attributed to each class.
+    pub fn total_ns(&self) -> u128 {
+        self.hists.iter().map(|h| h.sum()).sum()
+    }
+
+    pub fn merge(&mut self, other: &Telemetry) {
+        for i in 0..5 {
+            self.hists[i].merge(&other.hists[i]);
+            self.bytes[i] += other.bytes[i];
+            self.ops[i] += other.ops[i];
+        }
+    }
+
+    /// Multi-line report for the CLI / examples.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for &c in &AccessClass::ALL {
+            let i = Self::idx(c);
+            if self.ops[i] == 0 {
+                continue;
+            }
+            s.push_str(&format!(
+                "{:<12} ops={:<9} bytes={:<12} {}\n",
+                c.name(),
+                self.ops[i],
+                self.bytes[i],
+                self.hists[i].report()
+            ));
+        }
+        if s.is_empty() {
+            s.push_str("(no accesses recorded)\n");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification() {
+        assert_eq!(AccessClass::of(&AccessDesc::read(0, 1)), AccessClass::LocalRead);
+        assert_eq!(AccessClass::of(&AccessDesc::write(0, 1)), AccessClass::LocalWrite);
+        assert_eq!(AccessClass::of(&AccessDesc::read(1, 1)), AccessClass::RemoteRead);
+        assert_eq!(AccessClass::of(&AccessDesc::write(2, 1)), AccessClass::RemoteWrite);
+        assert_eq!(AccessClass::of(&AccessDesc::mmio()), AccessClass::Mmio);
+    }
+
+    #[test]
+    fn record_accumulates() {
+        let mut t = Telemetry::new();
+        t.record(&AccessDesc::read(1, 4096), 300.0);
+        t.record(&AccessDesc::read(1, 4096), 500.0);
+        assert_eq!(t.ops(AccessClass::RemoteRead), 2);
+        assert_eq!(t.bytes(AccessClass::RemoteRead), 8192);
+        assert_eq!(t.hist(AccessClass::RemoteRead).count(), 2);
+        assert_eq!(t.total_ops(), 2);
+        assert!(t.total_ns() >= 800);
+    }
+
+    #[test]
+    fn merge_combines_classes() {
+        let mut a = Telemetry::new();
+        let mut b = Telemetry::new();
+        a.record(&AccessDesc::read(0, 10), 80.0);
+        b.record(&AccessDesc::write(1, 20), 250.0);
+        a.merge(&b);
+        assert_eq!(a.total_ops(), 2);
+        assert_eq!(a.bytes(AccessClass::RemoteWrite), 20);
+    }
+
+    #[test]
+    fn report_skips_empty_classes() {
+        let mut t = Telemetry::new();
+        t.record(&AccessDesc::read(0, 1), 80.0);
+        let r = t.report();
+        assert!(r.contains("local_read"));
+        assert!(!r.contains("remote_write"));
+    }
+
+    #[test]
+    fn empty_report() {
+        assert!(Telemetry::new().report().contains("no accesses"));
+    }
+}

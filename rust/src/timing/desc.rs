@@ -1,0 +1,100 @@
+//! Access descriptors — the unit of exchange with the L1 Pallas kernel.
+//!
+//! Wire layout is four f32 lanes `[op, node, bytes, qdepth]`, matching the
+//! descriptor columns documented in `python/compile/kernels/latency.py`.
+
+/// Operation class, encoded as the f32 the kernel expects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    Read,
+    Write,
+    /// CXL.io configuration-path operation.
+    Mmio,
+}
+
+impl Op {
+    #[inline]
+    pub fn encode(self) -> f32 {
+        match self {
+            Op::Read => 0.0,
+            Op::Write => 1.0,
+            Op::Mmio => 2.0,
+        }
+    }
+}
+
+/// One memory access to be priced by the timing model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccessDesc {
+    pub op: Op,
+    /// 0 = local DDR, 1 = CXL-remote (node index in the two-node appliance;
+    /// for larger topologies, any CXL-backed node encodes as 1).
+    pub node: u32,
+    pub bytes: u64,
+    /// Outstanding-request estimate observed at issue.
+    pub qdepth: f32,
+}
+
+impl AccessDesc {
+    pub fn read(node: u32, bytes: u64) -> Self {
+        Self { op: Op::Read, node, bytes, qdepth: 0.0 }
+    }
+
+    pub fn write(node: u32, bytes: u64) -> Self {
+        Self { op: Op::Write, node, bytes, qdepth: 0.0 }
+    }
+
+    pub fn mmio() -> Self {
+        Self { op: Op::Mmio, node: 1, bytes: 0, qdepth: 0.0 }
+    }
+
+    pub fn with_qdepth(mut self, q: f32) -> Self {
+        self.qdepth = q;
+        self
+    }
+
+    /// Kernel wire format.
+    #[inline]
+    pub fn encode(&self) -> [f32; 4] {
+        [
+            self.op.encode(),
+            if self.node == 0 { 0.0 } else { 1.0 },
+            self.bytes as f32,
+            self.qdepth,
+        ]
+    }
+
+    /// Padding row: a descriptor whose latency is computed but discarded.
+    #[inline]
+    pub fn pad() -> [f32; 4] {
+        [0.0, 0.0, 0.0, 0.0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoding_matches_kernel_contract() {
+        assert_eq!(AccessDesc::read(0, 64).encode(), [0.0, 0.0, 64.0, 0.0]);
+        assert_eq!(AccessDesc::write(1, 128).encode(), [1.0, 1.0, 128.0, 0.0]);
+        assert_eq!(AccessDesc::mmio().encode(), [2.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn non_zero_nodes_collapse_to_remote() {
+        assert_eq!(AccessDesc::read(3, 64).encode()[1], 1.0);
+    }
+
+    #[test]
+    fn qdepth_travels() {
+        let d = AccessDesc::read(1, 64).with_qdepth(7.5);
+        assert_eq!(d.encode()[3], 7.5);
+    }
+
+    #[test]
+    fn pad_row_is_zero() {
+        assert_eq!(AccessDesc::pad(), [0.0; 4]);
+    }
+}

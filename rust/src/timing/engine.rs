@@ -1,0 +1,228 @@
+//! The timing engine: prices accesses, drives the virtual clock, keeps
+//! telemetry.
+//!
+//! Two pricing paths exist by design:
+//!
+//! * **Native** — the Rust mirror of the latency model. Used for
+//!   synchronous per-access pricing (e.g. every `emucxl_read` call).
+//! * **XLA** — the AOT-compiled Pallas artifact executed via PJRT. Used
+//!   wherever accesses arrive in batches (the coordinator's batcher, trace
+//!   replay, benches), and as the ground truth the native path is
+//!   cross-checked against ([`TimingEngine::cross_check`]).
+//!
+//! The two paths implement the same f32 arithmetic; `rust/tests/` assert
+//! their parity through the real artifact.
+
+use crate::error::Result;
+use crate::runtime::exec::LatencyBatchExec;
+use crate::runtime::XlaRuntime;
+use crate::stats::Telemetry;
+use crate::timing::clock::VirtualClock;
+use crate::timing::desc::AccessDesc;
+use crate::timing::model::TimingParams;
+
+/// Which path prices *batched* submissions. (Per-access pricing is always
+/// native: a single access cannot amortize a PJRT dispatch.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Everything native (artifacts not required — e.g. unit tests).
+    Native,
+    /// Batches through the XLA artifact; per-op pricing native.
+    Xla,
+}
+
+/// Owns the (optionally loaded) PJRT executable.
+///
+/// SAFETY of the `Send` impl: the `xla` crate leaves its PJRT wrappers
+/// `!Send` because they hold raw pointers and an `Rc`-based client handle.
+/// The executable here is (a) owned exclusively by one `TimingEngine`,
+/// (b) only reachable through `&TimingEngine` methods that the coordinator
+/// serializes behind a `Mutex`, and (c) never cloned — so at any instant at
+/// most one thread touches the underlying handles, which is the same
+/// discipline as moving a single-threaded object between threads. The PJRT
+/// CPU plugin itself is internally synchronized per the PJRT C API
+/// contract.
+struct ExecCell(Option<LatencyBatchExec>);
+
+unsafe impl Send for ExecCell {}
+
+/// Prices accesses and accumulates virtual time + telemetry.
+pub struct TimingEngine {
+    params: TimingParams,
+    clock: VirtualClock,
+    telemetry: Telemetry,
+    mode: EngineMode,
+    exec: ExecCell,
+}
+
+impl std::fmt::Debug for TimingEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TimingEngine")
+            .field("mode", &self.mode)
+            .field("now_ns", &self.clock.now_ns())
+            .finish()
+    }
+}
+
+impl TimingEngine {
+    /// Native-only engine (no artifacts needed).
+    pub fn native(params: TimingParams) -> Self {
+        Self {
+            params,
+            clock: VirtualClock::new(),
+            telemetry: Telemetry::new(),
+            mode: EngineMode::Native,
+            exec: ExecCell(None),
+        }
+    }
+
+    /// Engine with the XLA batch path loaded from `runtime`.
+    pub fn with_xla(params: TimingParams, runtime: &XlaRuntime) -> Result<Self> {
+        Ok(Self {
+            params,
+            clock: VirtualClock::new(),
+            telemetry: Telemetry::new(),
+            mode: EngineMode::Xla,
+            exec: ExecCell(Some(runtime.latency_batch()?)),
+        })
+    }
+
+    pub fn mode(&self) -> EngineMode {
+        self.mode
+    }
+
+    pub fn params(&self) -> &TimingParams {
+        &self.params
+    }
+
+    pub fn set_params(&mut self, p: TimingParams) {
+        self.params = p;
+    }
+
+    pub fn clock(&self) -> &VirtualClock {
+        &self.clock
+    }
+
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    /// Artifact batch size when the XLA path is loaded.
+    pub fn xla_batch(&self) -> Option<usize> {
+        self.exec.0.as_ref().map(|e| e.batch())
+    }
+
+    /// Price one access without recording it.
+    #[inline]
+    pub fn price(&self, desc: &AccessDesc) -> f32 {
+        self.params.latency_ns(desc)
+    }
+
+    /// Price and record one access: advances the virtual clock and
+    /// telemetry. Returns the latency in ns.
+    #[inline]
+    pub fn record(&mut self, desc: &AccessDesc) -> f32 {
+        let ns = self.params.latency_ns(desc);
+        self.clock.advance(ns as f64);
+        self.telemetry.record(desc, ns);
+        ns
+    }
+
+    /// Price a batch WITHOUT recording. XLA path when loaded (chunked to
+    /// the artifact batch size), else native.
+    pub fn price_batch(&self, descs: &[AccessDesc]) -> Result<Vec<f32>> {
+        match (&self.exec.0, self.mode) {
+            (Some(exec), EngineMode::Xla) => {
+                let mut out = Vec::with_capacity(descs.len());
+                for chunk in descs.chunks(exec.batch()) {
+                    out.extend(exec.run(chunk, &self.params)?);
+                }
+                Ok(out)
+            }
+            _ => Ok(self.params.latency_batch(descs)),
+        }
+    }
+
+    /// Price and record a batch; clock advances by the batch's total
+    /// latency (accesses in a batch are serialized onto the virtual
+    /// timeline in submission order).
+    pub fn record_batch(&mut self, descs: &[AccessDesc]) -> Result<Vec<f32>> {
+        let lats = self.price_batch(descs)?;
+        for (d, &ns) in descs.iter().zip(&lats) {
+            self.clock.advance(ns as f64);
+            self.telemetry.record(d, ns);
+        }
+        Ok(lats)
+    }
+
+    /// Max |native - xla| over a batch — the parity diagnostic surfaced by
+    /// `emucxl selftest` and asserted by integration tests.
+    pub fn cross_check(&self, descs: &[AccessDesc]) -> Result<f32> {
+        let exec = match &self.exec.0 {
+            Some(e) => e,
+            None => return Ok(0.0),
+        };
+        let native = self.params.latency_batch(descs);
+        let mut worst = 0.0f32;
+        for (chunk, nat_chunk) in
+            descs.chunks(exec.batch()).zip(native.chunks(exec.batch()))
+        {
+            let xla = exec.run(chunk, &self.params)?;
+            for (&a, &b) in xla.iter().zip(nat_chunk) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        Ok(worst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::AccessClass;
+
+    #[test]
+    fn record_advances_clock_and_telemetry() {
+        let mut e = TimingEngine::native(TimingParams::default());
+        let ns = e.record(&AccessDesc::read(1, 64));
+        assert!((ns - 254.0).abs() < 1e-3);
+        assert_eq!(e.clock().now_ns(), 254);
+        assert_eq!(e.telemetry().ops(AccessClass::RemoteRead), 1);
+    }
+
+    #[test]
+    fn native_batch_matches_scalar() {
+        let mut e = TimingEngine::native(TimingParams::default());
+        let descs = vec![AccessDesc::read(0, 64), AccessDesc::write(1, 4096)];
+        let lats = e.record_batch(&descs).unwrap();
+        assert_eq!(lats.len(), 2);
+        assert_eq!(lats[0], e.price(&descs[0]));
+        assert_eq!(lats[1], e.price(&descs[1]));
+        let expect = (lats[0] as f64 + lats[1] as f64) as u64;
+        assert!((e.clock().now_ns() as i64 - expect as i64).abs() <= 1);
+    }
+
+    #[test]
+    fn cross_check_without_xla_is_zero() {
+        let e = TimingEngine::native(TimingParams::default());
+        assert_eq!(e.cross_check(&[AccessDesc::read(1, 64)]).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn price_does_not_mutate() {
+        let e = TimingEngine::native(TimingParams::default());
+        let _ = e.price(&AccessDesc::read(0, 64));
+        assert_eq!(e.clock().now_ns(), 0);
+        assert_eq!(e.telemetry().total_ops(), 0);
+    }
+
+    #[test]
+    fn set_params_changes_pricing() {
+        let mut e = TimingEngine::native(TimingParams::default());
+        let before = e.price(&AccessDesc::read(1, 64));
+        let mut p = TimingParams::default();
+        p.remote_base_ns = 1000.0;
+        e.set_params(p);
+        assert!(e.price(&AccessDesc::read(1, 64)) > before + 700.0);
+    }
+}

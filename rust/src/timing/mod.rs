@@ -1,0 +1,18 @@
+//! Virtual-time latency accounting for the emulated CXL fabric.
+//!
+//! * [`desc`] — access descriptors, the interchange unit with the L1 kernel.
+//! * [`model`] — the native Rust mirror of the Pallas latency model
+//!   (bit-compatible f32 math; cross-checked against the artifact).
+//! * [`clock`] — the virtual clock latencies accumulate into.
+//! * [`engine`] — the batching engine that runs descriptors through the
+//!   AOT-compiled XLA artifact (or the native mirror) and drives the clock.
+
+pub mod clock;
+pub mod desc;
+pub mod engine;
+pub mod model;
+
+pub use clock::VirtualClock;
+pub use desc::{AccessDesc, Op};
+pub use engine::{EngineMode, TimingEngine};
+pub use model::TimingParams;

@@ -1,0 +1,232 @@
+//! Native mirror of the L1 Pallas latency model.
+//!
+//! This is the same arithmetic as `kernels/latency.py::_latency_block`,
+//! in the same order, in f32 — so the native path and the XLA artifact
+//! agree to within one ULP per operation. Integration tests
+//! (`rust/tests/xla_parity.rs`) assert the parity against the real
+//! artifact; `python/tests/test_kernel.py` pins the kernel against the jnp
+//! oracle. Together the three implementations form a closed loop.
+
+use crate::timing::desc::AccessDesc;
+
+/// Number of f32 parameters — must match `latency.py::NUM_PARAMS`.
+pub const NUM_PARAMS: usize = 16;
+
+/// The timing-model parameter vector. Field order IS the wire layout.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingParams {
+    pub local_base_ns: f32,
+    pub remote_base_ns: f32,
+    pub local_bytes_per_ns: f32,
+    pub remote_bytes_per_ns: f32,
+    pub flit_bytes: f32,
+    pub flit_overhead_ns: f32,
+    pub remote_qdelay_ns: f32,
+    pub write_factor: f32,
+    pub local_qdelay_ns: f32,
+    pub read_extra_ns: f32,
+    pub mmio_ns: f32,
+    pub drain_flits_per_step: f32,
+    pub occ_to_qdepth: f32,
+    pub max_occ_flits: f32,
+    pub inj_scale: f32,
+    pub reserved15: f32,
+}
+
+impl Default for TimingParams {
+    /// Must match `latency.py::DEFAULT_PARAMS` (pinned by tests on both
+    /// sides and by the artifact manifest).
+    fn default() -> Self {
+        Self {
+            local_base_ns: 80.0,
+            remote_base_ns: 250.0,
+            local_bytes_per_ns: 100.0,
+            remote_bytes_per_ns: 32.0,
+            flit_bytes: 64.0,
+            flit_overhead_ns: 2.0,
+            remote_qdelay_ns: 10.0,
+            write_factor: 1.1,
+            local_qdelay_ns: 1.0,
+            read_extra_ns: 0.0,
+            mmio_ns: 300.0,
+            drain_flits_per_step: 512.0,
+            occ_to_qdepth: 0.01,
+            max_occ_flits: 4096.0,
+            inj_scale: 1.0,
+            reserved15: 0.0,
+        }
+    }
+}
+
+impl TimingParams {
+    /// Wire layout for the XLA artifact.
+    pub fn to_vec(&self) -> [f32; NUM_PARAMS] {
+        [
+            self.local_base_ns,
+            self.remote_base_ns,
+            self.local_bytes_per_ns,
+            self.remote_bytes_per_ns,
+            self.flit_bytes,
+            self.flit_overhead_ns,
+            self.remote_qdelay_ns,
+            self.write_factor,
+            self.local_qdelay_ns,
+            self.read_extra_ns,
+            self.mmio_ns,
+            self.drain_flits_per_step,
+            self.occ_to_qdepth,
+            self.max_occ_flits,
+            self.inj_scale,
+            self.reserved15,
+        ]
+    }
+
+    pub fn from_vec(v: &[f32]) -> Option<Self> {
+        if v.len() != NUM_PARAMS {
+            return None;
+        }
+        Some(Self {
+            local_base_ns: v[0],
+            remote_base_ns: v[1],
+            local_bytes_per_ns: v[2],
+            remote_bytes_per_ns: v[3],
+            flit_bytes: v[4],
+            flit_overhead_ns: v[5],
+            remote_qdelay_ns: v[6],
+            write_factor: v[7],
+            local_qdelay_ns: v[8],
+            read_extra_ns: v[9],
+            mmio_ns: v[10],
+            drain_flits_per_step: v[11],
+            occ_to_qdepth: v[12],
+            max_occ_flits: v[13],
+            inj_scale: v[14],
+            reserved15: v[15],
+        })
+    }
+
+    /// Latency of one access, in ns — `_latency_block` transliterated.
+    #[inline]
+    pub fn latency_ns(&self, desc: &AccessDesc) -> f32 {
+        let [op, node, nbytes, qdepth] = desc.encode();
+        let is_remote = node >= 0.5;
+        let is_write = (op - 1.0).abs() < 0.5;
+        let is_mmio = op >= 1.5;
+
+        let base = if is_remote { self.remote_base_ns } else { self.local_base_ns };
+        let bpns = if is_remote { self.remote_bytes_per_ns } else { self.local_bytes_per_ns };
+        let flits = (nbytes / self.flit_bytes).ceil().max(1.0);
+        let ser_ns = flits * self.flit_bytes / bpns;
+        let proto_ns = if is_remote { flits * self.flit_overhead_ns } else { 0.0 };
+        let wf = if is_write { self.write_factor } else { 1.0 };
+        let q_ns =
+            qdepth * if is_remote { self.remote_qdelay_ns } else { self.local_qdelay_ns };
+        let lat = base + (ser_ns + proto_ns) * wf + q_ns + self.read_extra_ns;
+        if is_mmio {
+            self.mmio_ns + q_ns
+        } else {
+            lat
+        }
+    }
+
+    /// Batched native evaluation (same shape as the XLA artifact call).
+    pub fn latency_batch(&self, descs: &[AccessDesc]) -> Vec<f32> {
+        descs.iter().map(|d| self.latency_ns(d)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::desc::{AccessDesc, Op};
+
+    fn p() -> TimingParams {
+        TimingParams::default()
+    }
+
+    #[test]
+    fn wire_layout_roundtrip() {
+        let v = p().to_vec();
+        assert_eq!(v.len(), NUM_PARAMS);
+        assert_eq!(TimingParams::from_vec(&v), Some(p()));
+        assert!(TimingParams::from_vec(&v[..10]).is_none());
+    }
+
+    #[test]
+    fn default_matches_python_default() {
+        // Spot values pinned against latency.py::DEFAULT_PARAMS.
+        let v = p().to_vec();
+        assert_eq!(v[0], 80.0);
+        assert_eq!(v[1], 250.0);
+        assert_eq!(v[3], 32.0);
+        assert_eq!(v[7], 1.1);
+        assert_eq!(v[10], 300.0);
+    }
+
+    #[test]
+    fn hand_computed_latencies() {
+        let p = p();
+        // local 64 B read: 80 + ceil(64/64)*64/100 = 80.64
+        let lat = p.latency_ns(&AccessDesc::read(0, 64));
+        assert!((lat - 80.64).abs() < 1e-4, "{lat}");
+        // remote 64 B read: 250 + (64/32 + 2) = 254
+        let lat = p.latency_ns(&AccessDesc::read(1, 64));
+        assert!((lat - 254.0).abs() < 1e-4, "{lat}");
+        // remote 64 B write: 250 + 4*1.1 = 254.4
+        let lat = p.latency_ns(&AccessDesc::write(1, 64));
+        assert!((lat - 254.4).abs() < 1e-3, "{lat}");
+    }
+
+    #[test]
+    fn remote_exceeds_local_everywhere() {
+        let p = p();
+        for bytes in [1u64, 64, 100, 4096, 1 << 20] {
+            for op in [Op::Read, Op::Write] {
+                let l = p.latency_ns(&AccessDesc { op, node: 0, bytes, qdepth: 0.0 });
+                let r = p.latency_ns(&AccessDesc { op, node: 1, bytes, qdepth: 0.0 });
+                assert!(r > l, "bytes={bytes} op={op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mmio_ignores_size() {
+        let p = p();
+        let a = p.latency_ns(&AccessDesc { op: Op::Mmio, node: 1, bytes: 1, qdepth: 0.0 });
+        let b =
+            p.latency_ns(&AccessDesc { op: Op::Mmio, node: 1, bytes: 1 << 30, qdepth: 0.0 });
+        assert_eq!(a, b);
+        assert_eq!(a, 300.0);
+    }
+
+    #[test]
+    fn qdepth_adds_latency() {
+        let p = p();
+        let base = p.latency_ns(&AccessDesc::read(1, 64));
+        let queued = p.latency_ns(&AccessDesc::read(1, 64).with_qdepth(8.0));
+        assert!((queued - base - 80.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn sub_flit_access_pays_full_flit() {
+        let p = p();
+        assert_eq!(
+            p.latency_ns(&AccessDesc::read(1, 1)),
+            p.latency_ns(&AccessDesc::read(1, 64))
+        );
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let p = p();
+        let descs = vec![
+            AccessDesc::read(0, 64),
+            AccessDesc::write(1, 4096),
+            AccessDesc::mmio(),
+        ];
+        let batch = p.latency_batch(&descs);
+        for (d, &b) in descs.iter().zip(&batch) {
+            assert_eq!(p.latency_ns(d), b);
+        }
+    }
+}

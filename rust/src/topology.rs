@@ -1,0 +1,242 @@
+//! Emulated NUMA topology — the "virtual appliance" shape of Figure 2.
+//!
+//! The paper's appliance is a qemu+kvm VM with two vNUMA nodes: vNode0
+//! (CPUs + local DDR, backed by socket 0) and vNode1 (cpuless, memory only,
+//! backed by socket 1) — the cpuless node plays the CXL.mem expander, per
+//! POND. This module describes that shape declaratively so the rest of the
+//! stack (arenas, device, timing) is topology-driven rather than
+//! hard-coded to two nodes.
+
+use crate::error::{EmucxlError, Result};
+
+/// What a node's memory physically is in the emulated machine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryKind {
+    /// Host-attached DDR (socket-local).
+    Ddr,
+    /// CXL.mem expander memory behind the emulated controller.
+    CxlMem,
+}
+
+/// One emulated NUMA node.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub id: u32,
+    /// Capacity in bytes of the node's arena.
+    pub capacity: usize,
+    /// Cpuless nodes model memory-only expanders (paper: vNode1).
+    pub cpuless: bool,
+    pub kind: MemoryKind,
+}
+
+/// The emulated machine: nodes plus a NUMA distance matrix
+/// (`numactl --hardware` style, 10 = local).
+#[derive(Debug, Clone)]
+pub struct NumaTopology {
+    nodes: Vec<NodeSpec>,
+    /// distance[i][j], row-major; 10 on the diagonal by convention.
+    distance: Vec<Vec<u32>>,
+}
+
+impl NumaTopology {
+    /// Build and validate a topology.
+    pub fn new(nodes: Vec<NodeSpec>, distance: Vec<Vec<u32>>) -> Result<Self> {
+        if nodes.is_empty() {
+            return Err(EmucxlError::InvalidArgument("topology with no nodes".into()));
+        }
+        for (i, n) in nodes.iter().enumerate() {
+            if n.id != i as u32 {
+                return Err(EmucxlError::InvalidArgument(format!(
+                    "node ids must be dense: index {i} has id {}",
+                    n.id
+                )));
+            }
+            if n.capacity == 0 {
+                return Err(EmucxlError::InvalidArgument(format!(
+                    "node {i} has zero capacity"
+                )));
+            }
+        }
+        if distance.len() != nodes.len()
+            || distance.iter().any(|row| row.len() != nodes.len())
+        {
+            return Err(EmucxlError::InvalidArgument(
+                "distance matrix shape mismatch".into(),
+            ));
+        }
+        for (i, row) in distance.iter().enumerate() {
+            if row[i] != 10 {
+                return Err(EmucxlError::InvalidArgument(format!(
+                    "distance[{i}][{i}] must be 10 (local)"
+                )));
+            }
+        }
+        if !nodes.iter().any(|n| !n.cpuless) {
+            return Err(EmucxlError::InvalidArgument(
+                "at least one node must have CPUs".into(),
+            ));
+        }
+        Ok(Self { nodes, distance })
+    }
+
+    /// The paper's two-node virtual appliance: node 0 = CPUs + DDR,
+    /// node 1 = cpuless CXL.mem. Distance 10/24 mirrors a 2-socket box.
+    pub fn two_node_appliance(local_bytes: usize, remote_bytes: usize) -> Self {
+        Self::new(
+            vec![
+                NodeSpec { id: 0, capacity: local_bytes, cpuless: false, kind: MemoryKind::Ddr },
+                NodeSpec {
+                    id: 1,
+                    capacity: remote_bytes,
+                    cpuless: true,
+                    kind: MemoryKind::CxlMem,
+                },
+            ],
+            vec![vec![10, 24], vec![24, 10]],
+        )
+        .expect("static appliance is valid")
+    }
+
+    pub fn num_nodes(&self) -> u32 {
+        self.nodes.len() as u32
+    }
+
+    pub fn node(&self, id: u32) -> Result<&NodeSpec> {
+        self.nodes.get(id as usize).ok_or(EmucxlError::InvalidNode {
+            node: id,
+            num_nodes: self.num_nodes(),
+        })
+    }
+
+    pub fn nodes(&self) -> &[NodeSpec] {
+        &self.nodes
+    }
+
+    pub fn distance(&self, from: u32, to: u32) -> Result<u32> {
+        self.node(from)?;
+        self.node(to)?;
+        Ok(self.distance[from as usize][to as usize])
+    }
+
+    /// Nodes whose memory sits behind the CXL controller.
+    pub fn cxl_nodes(&self) -> impl Iterator<Item = &NodeSpec> {
+        self.nodes.iter().filter(|n| n.kind == MemoryKind::CxlMem)
+    }
+
+    /// Total pool capacity across all nodes.
+    pub fn total_capacity(&self) -> usize {
+        self.nodes.iter().map(|n| n.capacity).sum()
+    }
+
+    /// `numactl --hardware`-style description.
+    pub fn describe(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("available: {} nodes\n", self.nodes.len()));
+        for n in &self.nodes {
+            s.push_str(&format!(
+                "node {}: {} MiB {}{}\n",
+                n.id,
+                n.capacity / (1 << 20),
+                match n.kind {
+                    MemoryKind::Ddr => "DDR",
+                    MemoryKind::CxlMem => "CXL.mem",
+                },
+                if n.cpuless { " (cpuless)" } else { "" }
+            ));
+        }
+        s.push_str("distances:\n");
+        for row in &self.distance {
+            s.push_str("  ");
+            for d in row {
+                s.push_str(&format!("{d:>4}"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn appliance_matches_figure2() {
+        let t = NumaTopology::two_node_appliance(64 << 20, 256 << 20);
+        assert_eq!(t.num_nodes(), 2);
+        assert!(!t.node(0).unwrap().cpuless);
+        assert!(t.node(1).unwrap().cpuless);
+        assert_eq!(t.node(1).unwrap().kind, MemoryKind::CxlMem);
+        assert_eq!(t.distance(0, 1).unwrap(), 24);
+        assert_eq!(t.distance(0, 0).unwrap(), 10);
+        assert_eq!(t.total_capacity(), (64 << 20) + (256 << 20));
+    }
+
+    #[test]
+    fn invalid_node_id_rejected() {
+        let t = NumaTopology::two_node_appliance(1 << 20, 1 << 20);
+        assert!(matches!(t.node(2), Err(EmucxlError::InvalidNode { node: 2, .. })));
+    }
+
+    #[test]
+    fn zero_capacity_rejected() {
+        let r = NumaTopology::new(
+            vec![NodeSpec { id: 0, capacity: 0, cpuless: false, kind: MemoryKind::Ddr }],
+            vec![vec![10]],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn non_dense_ids_rejected() {
+        let r = NumaTopology::new(
+            vec![NodeSpec { id: 5, capacity: 1, cpuless: false, kind: MemoryKind::Ddr }],
+            vec![vec![10]],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn all_cpuless_rejected() {
+        let r = NumaTopology::new(
+            vec![NodeSpec { id: 0, capacity: 1, cpuless: true, kind: MemoryKind::CxlMem }],
+            vec![vec![10]],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_distance_shape_rejected() {
+        let r = NumaTopology::new(
+            vec![
+                NodeSpec { id: 0, capacity: 1, cpuless: false, kind: MemoryKind::Ddr },
+                NodeSpec { id: 1, capacity: 1, cpuless: true, kind: MemoryKind::CxlMem },
+            ],
+            vec![vec![10, 24]],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn diagonal_must_be_local() {
+        let r = NumaTopology::new(
+            vec![NodeSpec { id: 0, capacity: 1, cpuless: false, kind: MemoryKind::Ddr }],
+            vec![vec![20]],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn describe_mentions_nodes() {
+        let t = NumaTopology::two_node_appliance(1 << 20, 2 << 20);
+        let d = t.describe();
+        assert!(d.contains("node 0") && d.contains("CXL.mem") && d.contains("cpuless"));
+    }
+
+    #[test]
+    fn cxl_nodes_iterator() {
+        let t = NumaTopology::two_node_appliance(1 << 20, 1 << 20);
+        let ids: Vec<u32> = t.cxl_nodes().map(|n| n.id).collect();
+        assert_eq!(ids, vec![1]);
+    }
+}

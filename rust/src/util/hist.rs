@@ -1,0 +1,229 @@
+//! Log-bucketed latency histogram (HDR-style, 2 decimal digits of
+//! precision) for virtual-time latency accounting.
+
+/// Histogram over u64 nanosecond values with logarithmic buckets:
+/// each power of two is split into 64 linear sub-buckets (~1.6 % relative
+/// error), which is plenty for p50/p99 reporting.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u128,
+    sum_sq: f64,
+    min: u64,
+    max: u64,
+}
+
+const SUB_BITS: u32 = 6; // 64 sub-buckets per octave
+const SUB: u64 = 1 << SUB_BITS;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 64 octaves x 64 sub-buckets covers the full u64 range.
+        Self {
+            buckets: vec![0; (64 * SUB) as usize],
+            count: 0,
+            sum: 0,
+            sum_sq: 0.0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        if v < SUB {
+            return v as usize;
+        }
+        let oct = 63 - v.leading_zeros() as u64; // floor(log2 v), >= SUB_BITS
+        let sub = (v >> (oct - SUB_BITS as u64)) - SUB;
+        ((oct - SUB_BITS as u64 + 1) * SUB + sub) as usize
+    }
+
+    #[inline]
+    fn bucket_low(idx: usize) -> u64 {
+        let idx = idx as u64;
+        if idx < SUB {
+            return idx;
+        }
+        let oct = idx / SUB - 1 + SUB_BITS as u64;
+        let sub = idx % SUB;
+        (SUB + sub) << (oct - SUB_BITS as u64)
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.sum_sq += (v as f64) * (v as f64);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let n = self.count as f64;
+        let var = (self.sum_sq - (self.sum as f64) * (self.sum as f64) / n) / (n - 1.0);
+        var.max(0.0).sqrt()
+    }
+
+    /// Approximate quantile (lower bound of the containing bucket).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return Self::bucket_low(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.sum_sq += other.sum_sq;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// One-line report used by examples and the CLI.
+    pub fn report(&self) -> String {
+        format!(
+            "n={} mean={:.1}ns p50={}ns p99={}ns max={}ns",
+            self.count,
+            self.mean(),
+            self.p50(),
+            self.p99(),
+            self.max()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_histogram() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn exact_for_small_values() {
+        let mut h = LatencyHistogram::new();
+        for v in 0..64 {
+            h.record(v);
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 63);
+        assert_eq!(h.quantile(1.0), 63);
+    }
+
+    #[test]
+    fn bucket_relative_error_bounded() {
+        // lower bound of the bucket of v must be within ~1/64 of v
+        for v in [100u64, 1_000, 10_000, 123_456, 9_876_543, u32::MAX as u64] {
+            let low = LatencyHistogram::bucket_low(LatencyHistogram::bucket_of(v));
+            assert!(low <= v);
+            assert!(v - low <= v / 32, "v={v} low={low}");
+        }
+    }
+
+    #[test]
+    fn quantiles_of_uniform() {
+        let mut h = LatencyHistogram::new();
+        let mut r = Rng::new(1);
+        for _ in 0..100_000 {
+            h.record(r.range(0, 999_999));
+        }
+        let p50 = h.p50() as f64;
+        assert!((450_000.0..550_000.0).contains(&p50), "p50={p50}");
+        let p99 = h.p99() as f64;
+        assert!((950_000.0..1_000_000.0).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        let mut h = LatencyHistogram::new();
+        for v in [10u64, 20, 30] {
+            h.record(v);
+        }
+        assert!((h.mean() - 20.0).abs() < 1e-9);
+        assert!((h.stddev() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(5);
+        b.record(500);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min(), 5);
+        assert_eq!(a.max(), 500);
+    }
+
+    #[test]
+    fn report_contains_fields() {
+        let mut h = LatencyHistogram::new();
+        h.record(100);
+        let s = h.report();
+        assert!(s.contains("n=1") && s.contains("p99="));
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities (RNG, histograms, stats helpers).
+//!
+//! The build environment is offline with a minimal vendored crate set, so
+//! the usual suspects (`rand`, `hdrhistogram`, `criterion`, `proptest`) are
+//! re-implemented here at the size this project needs.
+
+pub mod hist;
+pub mod rng;
+pub mod stats;
+
+pub use hist::LatencyHistogram;
+pub use rng::{Rng, Zipf};
+pub use stats::Summary;

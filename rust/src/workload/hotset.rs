@@ -1,0 +1,119 @@
+//! Hotset access generator — the workload of Table IV.
+//!
+//! The paper's sweep: "90% get requests to X% objects" for
+//! X ∈ {10, …, 90}, plus a uniform-random row. A draw picks a key from the
+//! hot set with probability `hot_prob` and from the cold remainder
+//! otherwise; within each set keys are uniform.
+
+use crate::util::rng::Rng;
+
+/// Hot/cold key-space sampler.
+#[derive(Debug, Clone)]
+pub struct HotsetSampler {
+    num_keys: usize,
+    hot_keys: usize,
+    hot_prob: f64,
+}
+
+impl HotsetSampler {
+    /// `hot_fraction` of the key space receives `hot_prob` of accesses.
+    pub fn new(num_keys: usize, hot_fraction: f64, hot_prob: f64) -> Self {
+        assert!(num_keys > 0);
+        assert!((0.0..=1.0).contains(&hot_fraction));
+        assert!((0.0..=1.0).contains(&hot_prob));
+        let hot_keys = ((num_keys as f64 * hot_fraction).round() as usize)
+            .clamp(1, num_keys);
+        Self { num_keys, hot_keys, hot_prob }
+    }
+
+    /// The paper's Table IV row: 90% of GETs to `pct`% of objects.
+    pub fn paper_row(num_keys: usize, pct: u32) -> Self {
+        Self::new(num_keys, pct as f64 / 100.0, 0.9)
+    }
+
+    /// Uniform-random access (the paper's "Random Access" row).
+    pub fn uniform(num_keys: usize) -> Self {
+        // hot set == whole key space makes every draw uniform.
+        Self::new(num_keys, 1.0, 1.0)
+    }
+
+    pub fn num_keys(&self) -> usize {
+        self.num_keys
+    }
+
+    pub fn hot_keys(&self) -> usize {
+        self.hot_keys
+    }
+
+    /// Draw a key index in `[0, num_keys)`.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        if rng.chance(self.hot_prob) {
+            rng.index(self.hot_keys)
+        } else if self.hot_keys < self.num_keys {
+            self.hot_keys + rng.index(self.num_keys - self.hot_keys)
+        } else {
+            rng.index(self.num_keys)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_set_receives_hot_prob_mass() {
+        let s = HotsetSampler::paper_row(1000, 10); // 90% to 10%
+        let mut rng = Rng::new(1);
+        let mut hot = 0;
+        let n = 100_000;
+        for _ in 0..n {
+            if s.sample(&mut rng) < s.hot_keys() {
+                hot += 1;
+            }
+        }
+        let frac = hot as f64 / n as f64;
+        assert!((0.88..0.92).contains(&frac), "hot fraction {frac}");
+    }
+
+    #[test]
+    fn all_keys_reachable() {
+        let s = HotsetSampler::paper_row(50, 20);
+        let mut rng = Rng::new(2);
+        let mut seen = vec![false; 50];
+        for _ in 0..20_000 {
+            seen[s.sample(&mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "some keys never sampled");
+    }
+
+    #[test]
+    fn uniform_row_is_flat() {
+        let s = HotsetSampler::uniform(10);
+        let mut rng = Rng::new(3);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[s.sample(&mut rng)] += 1;
+        }
+        for c in counts {
+            assert!((8_000..12_000).contains(&c), "bucket {c}");
+        }
+    }
+
+    #[test]
+    fn indexes_in_range() {
+        for pct in [10, 50, 90] {
+            let s = HotsetSampler::paper_row(333, pct);
+            let mut rng = Rng::new(pct as u64);
+            for _ in 0..10_000 {
+                assert!(s.sample(&mut rng) < 333);
+            }
+        }
+    }
+
+    #[test]
+    fn hot_keys_at_least_one() {
+        let s = HotsetSampler::new(10, 0.001, 0.9);
+        assert_eq!(s.hot_keys(), 1);
+    }
+}

@@ -1,0 +1,4 @@
+//! Workload generation and trace replay.
+pub mod hotset;
+pub mod trace;
+pub mod ycsb;

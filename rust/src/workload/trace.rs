@@ -1,0 +1,209 @@
+//! Memory-access traces: generation, (de)serialization and replay through
+//! the timing engine.
+//!
+//! Traces are the input of the window-model analytics path (and of the
+//! `trace_replay` example): a sequence of raw accesses, replayable either
+//! natively or through the AOT-compiled window artifact.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use crate::error::{EmucxlError, Result};
+use crate::timing::desc::{AccessDesc, Op};
+use crate::util::rng::Rng;
+
+/// One trace record (a thin, serializable AccessDesc).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceOp {
+    pub op: Op,
+    pub node: u32,
+    pub bytes: u64,
+}
+
+impl TraceOp {
+    pub fn to_desc(self) -> AccessDesc {
+        AccessDesc { op: self.op, node: self.node, bytes: self.bytes, qdepth: 0.0 }
+    }
+}
+
+/// A replayable access trace.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+}
+
+/// Shape of synthetic traces.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpec {
+    pub n_ops: usize,
+    /// Probability an access is remote.
+    pub remote_frac: f64,
+    /// Probability an access is a write.
+    pub write_frac: f64,
+    /// Access sizes are drawn uniformly from this set.
+    pub sizes: [u64; 4],
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self {
+            n_ops: 100_000,
+            remote_frac: 0.5,
+            write_frac: 0.3,
+            sizes: [64, 256, 4096, 65536],
+        }
+    }
+}
+
+impl Trace {
+    /// Deterministic synthetic trace.
+    pub fn synthetic(spec: TraceSpec, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let ops = (0..spec.n_ops)
+            .map(|_| TraceOp {
+                op: if rng.chance(spec.write_frac) { Op::Write } else { Op::Read },
+                node: if rng.chance(spec.remote_frac) { 1 } else { 0 },
+                bytes: spec.sizes[rng.index(spec.sizes.len())],
+            })
+            .collect();
+        Self { ops }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Text format: one `op node bytes` triple per line (r/w/m).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = std::io::BufWriter::new(f);
+        for op in &self.ops {
+            let c = match op.op {
+                Op::Read => 'r',
+                Op::Write => 'w',
+                Op::Mmio => 'm',
+            };
+            writeln!(w, "{c} {} {}", op.node, op.bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let f = std::fs::File::open(path)?;
+        let mut ops = Vec::new();
+        for (i, line) in std::io::BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let err = || EmucxlError::InvalidArgument(format!("trace line {}", i + 1));
+            let op = match parts.next().ok_or_else(err)? {
+                "r" => Op::Read,
+                "w" => Op::Write,
+                "m" => Op::Mmio,
+                _ => return Err(err()),
+            };
+            let node: u32 = parts.next().ok_or_else(err)?.parse().map_err(|_| err())?;
+            let bytes: u64 = parts.next().ok_or_else(err)?.parse().map_err(|_| err())?;
+            ops.push(TraceOp { op, node, bytes });
+        }
+        Ok(Self { ops })
+    }
+
+    /// All descriptors (qdepth 0 — congestion is the window model's job).
+    pub fn descs(&self) -> Vec<AccessDesc> {
+        self.ops.iter().map(|o| o.to_desc()).collect()
+    }
+
+    /// Totals: (reads, writes, local_bytes, remote_bytes).
+    pub fn totals(&self) -> (usize, usize, u64, u64) {
+        let mut r = 0;
+        let mut w = 0;
+        let mut lb = 0;
+        let mut rb = 0;
+        for op in &self.ops {
+            match op.op {
+                Op::Read => r += 1,
+                Op::Write => w += 1,
+                Op::Mmio => {}
+            }
+            if op.node == 0 {
+                lb += op.bytes;
+            } else {
+                rb += op.bytes;
+            }
+        }
+        (r, w, lb, rb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_respects_spec() {
+        let spec = TraceSpec { n_ops: 50_000, remote_frac: 0.7, write_frac: 0.2, ..Default::default() };
+        let t = Trace::synthetic(spec, 1);
+        assert_eq!(t.len(), 50_000);
+        let remote = t.ops.iter().filter(|o| o.node == 1).count() as f64 / 50_000.0;
+        assert!((0.68..0.72).contains(&remote), "{remote}");
+        let writes = t.ops.iter().filter(|o| o.op == Op::Write).count() as f64 / 50_000.0;
+        assert!((0.18..0.22).contains(&writes), "{writes}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let spec = TraceSpec::default();
+        assert_eq!(Trace::synthetic(spec, 5), Trace::synthetic(spec, 5));
+        assert_ne!(Trace::synthetic(spec, 5), Trace::synthetic(spec, 6));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("emucxl_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.trace");
+        let t = Trace::synthetic(TraceSpec { n_ops: 1000, ..Default::default() }, 3);
+        t.save(&path).unwrap();
+        let u = Trace::load(&path).unwrap();
+        assert_eq!(t, u);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("emucxl_trace_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.trace");
+        std::fs::write(&path, "r 0 64\nx 1 9\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn totals_add_up() {
+        let t = Trace {
+            ops: vec![
+                TraceOp { op: Op::Read, node: 0, bytes: 10 },
+                TraceOp { op: Op::Write, node: 1, bytes: 20 },
+                TraceOp { op: Op::Read, node: 1, bytes: 30 },
+            ],
+        };
+        assert_eq!(t.totals(), (2, 1, 10, 50));
+    }
+
+    #[test]
+    fn descs_match_ops() {
+        let t = Trace::synthetic(TraceSpec { n_ops: 10, ..Default::default() }, 2);
+        let d = t.descs();
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0].bytes, t.ops[0].bytes);
+    }
+}

@@ -1,0 +1,168 @@
+//! YCSB-style mixed workload generator.
+//!
+//! Used by the end-to-end coordinator example and the ablation benches.
+//! Standard mixes: A (50/50 read/update), B (95/5), C (read-only),
+//! with zipfian (θ = 0.99) or uniform key choice.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Operation kinds issued by the generator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvOp {
+    Get,
+    Put,
+    Delete,
+}
+
+/// Standard YCSB mixes (+ a delete-heavy custom mix for churn tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum YcsbMix {
+    /// 50% reads / 50% updates.
+    A,
+    /// 95% reads / 5% updates.
+    B,
+    /// 100% reads.
+    C,
+    /// 40% reads / 40% updates / 20% deletes (churn).
+    Churn,
+}
+
+impl YcsbMix {
+    fn draw(self, rng: &mut Rng) -> KvOp {
+        let x = rng.f64();
+        match self {
+            YcsbMix::A => {
+                if x < 0.5 {
+                    KvOp::Get
+                } else {
+                    KvOp::Put
+                }
+            }
+            YcsbMix::B => {
+                if x < 0.95 {
+                    KvOp::Get
+                } else {
+                    KvOp::Put
+                }
+            }
+            YcsbMix::C => KvOp::Get,
+            YcsbMix::Churn => {
+                if x < 0.4 {
+                    KvOp::Get
+                } else if x < 0.8 {
+                    KvOp::Put
+                } else {
+                    KvOp::Delete
+                }
+            }
+        }
+    }
+}
+
+/// Key-choice distribution.
+#[derive(Debug, Clone)]
+pub enum KeyDist {
+    Uniform,
+    Zipf(Zipf),
+}
+
+/// One generated request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvRequest {
+    pub op: KvOp,
+    pub key: usize,
+    /// Value size for PUTs (0 otherwise).
+    pub value_len: usize,
+}
+
+/// The generator: seeded, deterministic, infinite.
+#[derive(Debug, Clone)]
+pub struct YcsbGenerator {
+    mix: YcsbMix,
+    dist: KeyDist,
+    num_keys: usize,
+    value_len: usize,
+    rng: Rng,
+}
+
+impl YcsbGenerator {
+    pub fn new(mix: YcsbMix, num_keys: usize, value_len: usize, zipfian: bool, seed: u64) -> Self {
+        let dist = if zipfian {
+            KeyDist::Zipf(Zipf::new(num_keys, 0.99))
+        } else {
+            KeyDist::Uniform
+        };
+        Self { mix, dist, num_keys, value_len, rng: Rng::new(seed) }
+    }
+
+    pub fn next_request(&mut self) -> KvRequest {
+        let op = self.mix.draw(&mut self.rng);
+        let key = match &self.dist {
+            KeyDist::Uniform => self.rng.index(self.num_keys),
+            KeyDist::Zipf(z) => z.sample(&mut self.rng),
+        };
+        KvRequest {
+            op,
+            key,
+            value_len: if op == KvOp::Put { self.value_len } else { 0 },
+        }
+    }
+
+    /// Generate a batch of requests.
+    pub fn batch(&mut self, n: usize) -> Vec<KvRequest> {
+        (0..n).map(|_| self.next_request()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_ratios_approximate() {
+        let mut g = YcsbGenerator::new(YcsbMix::B, 100, 64, false, 7);
+        let reqs = g.batch(100_000);
+        let gets = reqs.iter().filter(|r| r.op == KvOp::Get).count();
+        let frac = gets as f64 / reqs.len() as f64;
+        assert!((0.94..0.96).contains(&frac), "B mix GET fraction {frac}");
+    }
+
+    #[test]
+    fn c_mix_is_read_only() {
+        let mut g = YcsbGenerator::new(YcsbMix::C, 100, 64, true, 7);
+        assert!(g.batch(10_000).iter().all(|r| r.op == KvOp::Get));
+    }
+
+    #[test]
+    fn churn_has_deletes() {
+        let mut g = YcsbGenerator::new(YcsbMix::Churn, 100, 64, false, 7);
+        let dels = g.batch(10_000).iter().filter(|r| r.op == KvOp::Delete).count();
+        assert!((1500..2500).contains(&dels), "{dels}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = YcsbGenerator::new(YcsbMix::A, 50, 32, true, 42);
+        let mut b = YcsbGenerator::new(YcsbMix::A, 50, 32, true, 42);
+        assert_eq!(a.batch(100), b.batch(100));
+    }
+
+    #[test]
+    fn zipfian_skews_keys() {
+        let mut g = YcsbGenerator::new(YcsbMix::C, 1000, 64, true, 9);
+        let reqs = g.batch(50_000);
+        let hot = reqs.iter().filter(|r| r.key < 10).count();
+        assert!(hot > 5_000, "zipf should concentrate mass, hot={hot}");
+    }
+
+    #[test]
+    fn put_carries_value_len() {
+        let mut g = YcsbGenerator::new(YcsbMix::A, 50, 77, false, 1);
+        for r in g.batch(1000) {
+            match r.op {
+                KvOp::Put => assert_eq!(r.value_len, 77),
+                _ => assert_eq!(r.value_len, 0),
+            }
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! End-to-end coordinator tests: real TCP server, real clients, tenant
+//! quotas, shared KV store, concurrent tenants through the dynamic batcher.
+
+use std::time::Duration;
+
+use emucxl::config::EmucxlConfig;
+use emucxl::coordinator::client::PoolClient;
+use emucxl::coordinator::server::{PoolConfig, PoolServer};
+use emucxl::middleware::kv::GetPolicy;
+
+fn server() -> PoolServer {
+    let cfg = PoolConfig {
+        emucxl: EmucxlConfig::sized(8 << 20, 32 << 20),
+        kv_local_capacity: 4,
+        kv_policy: GetPolicy::Promote,
+        batch: 16,
+        max_wait: Duration::from_micros(100),
+    };
+    PoolServer::start(cfg, 0).expect("start server")
+}
+
+#[test]
+fn alloc_write_read_free_over_the_wire() {
+    let srv = server();
+    let mut c = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    assert!(c.tenant_id() > 0);
+
+    let (addr, lat) = c.alloc(4096, 1).unwrap();
+    assert!(lat > 0.0);
+    assert!(!c.is_local(addr).unwrap());
+
+    let w_lat = c.write(addr, b"over the wire").unwrap();
+    assert!(w_lat > 0.0);
+    let (data, r_lat) = c.read(addr, 13).unwrap();
+    assert_eq!(&data, b"over the wire");
+    assert!(r_lat > 0.0);
+
+    let (allocated, _, _) = c.stats(1).unwrap();
+    assert_eq!(allocated, 4096);
+    c.free(addr).unwrap();
+    let (allocated, _, _) = c.stats(1).unwrap();
+    assert_eq!(allocated, 0);
+    c.bye().unwrap();
+}
+
+#[test]
+fn remote_write_priced_higher_than_local() {
+    let srv = server();
+    let mut c = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let (local, _) = c.alloc(65536, 0).unwrap();
+    let (remote, _) = c.alloc(65536, 1).unwrap();
+    let data = vec![0u8; 65536];
+    let l = c.write(local, &data).unwrap();
+    let r = c.write(remote, &data).unwrap();
+    assert!(r > 2.0 * l, "remote {r} ns vs local {l} ns");
+}
+
+#[test]
+fn quota_is_enforced_and_credited() {
+    let srv = server();
+    let mut c = PoolClient::connect(srv.addr(), 8192).unwrap();
+    let (a, _) = c.alloc(4096, 0).unwrap();
+    let (_b, _) = c.alloc(4096, 0).unwrap();
+    let err = c.alloc(1, 0).unwrap_err();
+    assert!(err.to_string().contains("quota"), "{err}");
+    // freeing restores headroom
+    c.free(a).unwrap();
+    c.alloc(4096, 1).unwrap();
+}
+
+#[test]
+fn tenants_cannot_free_each_others_memory() {
+    let srv = server();
+    let mut alice = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let mut bob = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let (addr, _) = alice.alloc(4096, 0).unwrap();
+    let err = bob.free(addr).unwrap_err();
+    assert!(err.to_string().contains("not mapped"), "{err}");
+    // alice still owns it
+    alice.write(addr, b"mine").unwrap();
+}
+
+#[test]
+fn migrate_moves_and_reprices() {
+    let srv = server();
+    let mut c = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let (addr, _) = c.alloc(4096, 0).unwrap();
+    c.write(addr, b"movable").unwrap();
+    let (new_addr, lat) = c.migrate(addr, 1).unwrap();
+    assert!(lat > 0.0);
+    assert!(!c.is_local(new_addr).unwrap());
+    let (data, _) = c.read(new_addr, 7).unwrap();
+    assert_eq!(&data, b"movable");
+    // old handle is dead
+    assert!(c.read(addr, 1).is_err());
+    c.free(new_addr).unwrap();
+}
+
+#[test]
+fn disconnect_reclaims_tenant_memory() {
+    let srv = server();
+    {
+        let mut c = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+        c.alloc(4096, 0).unwrap();
+        c.alloc(8192, 1).unwrap();
+        c.bye().unwrap();
+    }
+    // give the server thread a moment to run the reclaim path
+    std::thread::sleep(Duration::from_millis(100));
+    let mut probe = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let (alloc0, _, _) = probe.stats(0).unwrap();
+    let (alloc1, _, _) = probe.stats(1).unwrap();
+    assert_eq!(alloc0 + alloc1, 0, "disconnected tenant's memory must be reclaimed");
+}
+
+#[test]
+fn shared_kv_store_visible_across_tenants() {
+    let srv = server();
+    let mut a = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let mut b = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    a.kv_put(b"shared-key", b"from-alice").unwrap();
+    let (v, _) = b.kv_get(b"shared-key").unwrap();
+    assert_eq!(v, Some(b"from-alice".to_vec()));
+    assert!(b.kv_delete(b"shared-key").unwrap());
+    let (v, _) = a.kv_get(b"shared-key").unwrap();
+    assert_eq!(v, None);
+    assert!(!a.kv_delete(b"shared-key").unwrap());
+}
+
+#[test]
+fn kv_eviction_prices_remote_reads_higher() {
+    let srv = server(); // kv_local_capacity = 4
+    let mut c = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let value = vec![7u8; 4096];
+    for i in 0..8u32 {
+        c.kv_put(format!("k{i}").as_bytes(), &value).unwrap();
+    }
+    // k0..k3 got evicted to remote; k4..k7 are local.
+    let (_, remote_lat) = c.kv_get(b"k0").unwrap();
+    let (_, local_lat) = c.kv_get(b"k7").unwrap();
+    assert!(
+        remote_lat > local_lat,
+        "remote kv hit {remote_lat} vs local {local_lat}"
+    );
+}
+
+#[test]
+fn concurrent_tenants_hammer_the_pool() {
+    let srv = server();
+    let addr = srv.addr();
+    let mut handles = vec![];
+    for t in 0..6u32 {
+        handles.push(std::thread::spawn(move || {
+            let mut c = PoolClient::connect(addr, 4 << 20).unwrap();
+            let mut addrs = vec![];
+            for i in 0..30 {
+                let node = (t + i) % 2;
+                let (a, _) = c.alloc(4096, node).unwrap();
+                c.write(a, format!("tenant{t}-{i}").as_bytes()).unwrap();
+                addrs.push(a);
+            }
+            for (i, &a) in addrs.iter().enumerate() {
+                let want = format!("tenant{t}-{i}");
+                let (data, _) = c.read(a, want.len() as u32).unwrap();
+                assert_eq!(data, want.as_bytes(), "tenant {t} saw corrupt data");
+            }
+            for a in addrs {
+                c.free(a).unwrap();
+            }
+            c.bye().unwrap();
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let (flushes, priced) = srv.batcher_stats();
+    assert!(priced >= 6 * 60, "all ops priced (got {priced})");
+    assert!(flushes < priced, "batching occurred: {flushes} flushes / {priced} descs");
+}
+
+#[test]
+fn unregistered_requests_rejected() {
+    use emucxl::coordinator::proto::{read_frame, write_frame, Request, Response};
+    use std::io::{BufReader, BufWriter};
+    let srv = server();
+    let stream = std::net::TcpStream::connect(srv.addr()).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let mut w = BufWriter::new(stream);
+    write_frame(&mut w, &Request::Alloc { size: 64, node: 0 }.encode()).unwrap();
+    let resp = Response::decode(&read_frame(&mut r).unwrap().unwrap()).unwrap();
+    match resp {
+        Response::Error { msg } => assert!(msg.contains("Hello"), "{msg}"),
+        other => panic!("expected error, got {other:?}"),
+    }
+}
+
+#[test]
+fn server_virtual_clock_advances() {
+    let srv = server();
+    let mut c = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let t0 = srv.now_ns();
+    let (a, _) = c.alloc(4096, 1).unwrap();
+    c.write(a, &[0u8; 4096]).unwrap();
+    assert!(srv.now_ns() > t0);
+}

@@ -1,0 +1,175 @@
+//! Integration tests through the REAL AOT artifacts: Rust native model vs
+//! the XLA-compiled Pallas kernel, the window model, and the calibration
+//! artifact. These close the three-implementation loop (jnp oracle ==
+//! Pallas kernel == Rust mirror).
+//!
+//! Requires `make artifacts` (skipped with a message otherwise, so plain
+//! `cargo test` works in a fresh checkout).
+
+use emucxl::runtime::XlaRuntime;
+use emucxl::timing::desc::{AccessDesc, Op};
+use emucxl::timing::engine::TimingEngine;
+use emucxl::timing::model::TimingParams;
+use emucxl::util::rng::Rng;
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match XlaRuntime::open(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn random_descs(n: usize, seed: u64) -> Vec<AccessDesc> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| AccessDesc {
+            op: match rng.index(3) {
+                0 => Op::Read,
+                1 => Op::Write,
+                _ => Op::Mmio,
+            },
+            node: rng.index(2) as u32,
+            bytes: [1u64, 64, 100, 256, 4096, 65536, 1 << 20][rng.index(7)],
+            qdepth: rng.index(256) as f32,
+        })
+        .collect()
+}
+
+#[test]
+fn native_matches_xla_artifact_exactly() {
+    let Some(rt) = runtime() else { return };
+    let engine = TimingEngine::with_xla(TimingParams::default(), &rt).unwrap();
+    for seed in 0..4 {
+        let descs = random_descs(1024, seed);
+        let worst = engine.cross_check(&descs).unwrap();
+        // identical f32 math on both sides: worst-case one ULP per op
+        assert!(worst <= 1e-3, "seed {seed}: max |native - xla| = {worst}");
+    }
+}
+
+#[test]
+fn artifact_latency_values_spot_checked() {
+    let Some(rt) = runtime() else { return };
+    let exec = rt.latency_batch().unwrap();
+    let p = TimingParams::default();
+    let descs =
+        vec![AccessDesc::read(0, 64), AccessDesc::read(1, 64), AccessDesc::write(1, 64)];
+    let lats = exec.run(&descs, &p).unwrap();
+    assert!((lats[0] - 80.64).abs() < 1e-3, "local 64B read: {}", lats[0]);
+    assert!((lats[1] - 254.0).abs() < 1e-3, "remote 64B read: {}", lats[1]);
+    assert!((lats[2] - 254.4).abs() < 1e-3, "remote 64B write: {}", lats[2]);
+}
+
+#[test]
+fn artifact_padding_is_dropped() {
+    let Some(rt) = runtime() else { return };
+    let exec = rt.latency_batch().unwrap();
+    let p = TimingParams::default();
+    let one = exec.run(&[AccessDesc::read(1, 4096)], &p).unwrap();
+    assert_eq!(one.len(), 1);
+    assert_eq!(one[0], p.latency_ns(&AccessDesc::read(1, 4096)));
+}
+
+#[test]
+fn oversized_batch_rejected() {
+    let Some(rt) = runtime() else { return };
+    let exec = rt.latency_batch().unwrap();
+    let p = TimingParams::default();
+    let descs = vec![AccessDesc::read(0, 64); exec.batch() + 1];
+    assert!(exec.run(&descs, &p).is_err());
+}
+
+#[test]
+fn window_model_degenerate_matches_batch_kernel() {
+    let Some(rt) = runtime() else { return };
+    let window = rt.window_model().unwrap();
+    let batch_exec = rt.latency_batch().unwrap();
+    // occ_to_qdepth = 0 -> scan steps are independent kernel calls.
+    let mut p = TimingParams::default();
+    p.occ_to_qdepth = 0.0;
+    let n = window.window() * window.batch();
+    let descs = random_descs(n, 11);
+    let rows: Vec<[f32; 4]> = descs.iter().map(|d| d.encode()).collect();
+    let out = window.run(&rows, &p, 0.0).unwrap();
+    assert_eq!(out.latencies.len(), n);
+    for (w, chunk) in descs.chunks(window.batch()).enumerate() {
+        let want = batch_exec.run(chunk, &p).unwrap();
+        let got = &out.latencies[w * window.batch()..(w + 1) * window.batch()];
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "window[{w}]: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn window_model_congestion_accumulates() {
+    let Some(rt) = runtime() else { return };
+    let window = rt.window_model().unwrap();
+    let p = TimingParams::default();
+    let n = window.window() * window.batch();
+    // all-remote heavy writes: queue must build and raise latency
+    let rows: Vec<[f32; 4]> =
+        (0..n).map(|_| AccessDesc::write(1, 65536).encode()).collect();
+    let cold = window.run(&rows, &p, 0.0).unwrap();
+    let hot = window.run(&rows, &p, 4096.0).unwrap();
+    assert!(cold.final_occ > 0.0, "queue should accumulate");
+    assert!(
+        hot.summary[0] > cold.summary[0],
+        "carried-in occupancy must increase total latency"
+    );
+    // byte accounting: all remote
+    assert_eq!(cold.summary[2], 0.0);
+    assert!((cold.summary[3] - (n as f32 * 65536.0)).abs() / cold.summary[3] < 1e-6);
+}
+
+#[test]
+fn calibration_artifact_converges_from_rust() {
+    let Some(rt) = runtime() else { return };
+    let calib = rt.calib_step().unwrap();
+    let b = calib.batch();
+    let mut rng = Rng::new(3);
+    let descs: Vec<AccessDesc> = (0..b)
+        .map(|_| AccessDesc::read(rng.index(2) as u32, [64u64, 4096][rng.index(2)]))
+        .collect();
+    // ground truth: a machine with slower remote memory
+    let mut target = TimingParams::default();
+    target.remote_base_ns = 400.0;
+    let observed: Vec<f32> = descs.iter().map(|d| target.latency_ns(d)).collect();
+
+    let mut params = TimingParams::default();
+    let (loss0, _) = calib.step(&params, &descs, &observed, 0.0).unwrap();
+    for _ in 0..300 {
+        let (_, p) = calib.step(&params, &descs, &observed, 1e5).unwrap();
+        params = p;
+    }
+    let (loss1, _) = calib.step(&params, &descs, &observed, 0.0).unwrap();
+    assert!(
+        loss1 < loss0 * 1e-2,
+        "calibration failed to converge: {loss0} -> {loss1}"
+    );
+    assert!(
+        (params.remote_base_ns - 400.0).abs() < 30.0,
+        "remote_base calibrated to {}",
+        params.remote_base_ns
+    );
+    // window-model tail stays frozen (CALIB_MASK)
+    assert_eq!(params.drain_flits_per_step, 512.0);
+}
+
+#[test]
+fn engine_xla_mode_prices_batches_through_artifact() {
+    let Some(rt) = runtime() else { return };
+    let mut engine = TimingEngine::with_xla(TimingParams::default(), &rt).unwrap();
+    let descs = random_descs(1000, 21); // not a multiple of batch: pad path
+    let lats = engine.record_batch(&descs).unwrap();
+    assert_eq!(lats.len(), 1000);
+    let native = TimingParams::default().latency_batch(&descs);
+    for (a, b) in lats.iter().zip(&native) {
+        assert!((a - b).abs() <= 1e-3);
+    }
+    assert!(engine.clock().now_ns() > 0);
+}
