@@ -43,6 +43,7 @@ fn main() -> emucxl::Result<()> {
         kv_policy: GetPolicy::Promote,
         batch: 64,
         max_wait: Duration::from_micros(200),
+        trace_dump: None,
     };
     let srv = PoolServer::start(cfg, 0)?;
     let addr = srv.addr();

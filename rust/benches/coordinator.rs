@@ -27,6 +27,7 @@ fn run_scale(tenants: usize, artifacts: Option<std::path::PathBuf>) -> (f64, f64
         kv_policy: GetPolicy::Promote,
         batch: 64,
         max_wait: Duration::from_micros(200),
+        trace_dump: None,
     };
     let srv = PoolServer::start(cfg, 0).unwrap();
     let addr = srv.addr();

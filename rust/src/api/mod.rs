@@ -24,10 +24,13 @@
 
 pub mod registry;
 
+use std::sync::Arc;
+
 use crate::config::EmucxlConfig;
 use crate::device::chardev::{AccessPath, EmucxlDevice, Fd};
 use crate::error::{EmucxlError, Result};
 use crate::mem::vaspace::VAddr;
+use crate::obs::{self, Counter, Histogram, Subsystem};
 use crate::runtime::XlaRuntime;
 use crate::stats::Telemetry;
 use crate::timing::desc::{AccessDesc, Op};
@@ -51,6 +54,62 @@ pub struct NodeStats {
     pub capacity: usize,
 }
 
+/// Instrumented Table II entry points, indexed into [`ApiObs`] arrays.
+const API_OPS: [&str; 5] = ["alloc", "free", "read", "write", "migrate"];
+const OP_ALLOC: usize = 0;
+const OP_FREE: usize = 1;
+const OP_READ: usize = 2;
+const OP_WRITE: usize = 3;
+const OP_MIGRATE: usize = 4;
+
+/// Observability handles for the API surface, resolved once at init.
+#[derive(Debug)]
+struct ApiObs {
+    ok: [Arc<Counter>; 5],
+    err: [Arc<Counter>; 5],
+    lat: [Arc<Histogram>; 5],
+}
+
+impl ApiObs {
+    fn new() -> Self {
+        let m = obs::metrics();
+        const HELP: &str = "EmucxlContext API calls by op and outcome";
+        Self {
+            ok: std::array::from_fn(|i| {
+                m.counter("emucxl_api_ops_total", HELP, &[("op", API_OPS[i]), ("outcome", "ok")])
+            }),
+            err: std::array::from_fn(|i| {
+                m.counter(
+                    "emucxl_api_ops_total",
+                    HELP,
+                    &[("op", API_OPS[i]), ("outcome", "error")],
+                )
+            }),
+            lat: std::array::from_fn(|i| {
+                m.histogram(
+                    "emucxl_api_latency_ns",
+                    "virtual-clock latency of successful API calls (ns)",
+                    &[("op", API_OPS[i])],
+                )
+            }),
+        }
+    }
+
+    /// Record one API call: outcome counter, latency histogram (ok calls
+    /// only — errors don't advance the virtual clock meaningfully) and a
+    /// flight-recorder event stamped with the active span.
+    fn record(&self, op: usize, t0_ns: u64, now_ns: u64, arg: u64, bytes: u64, ok: bool) {
+        let lat = now_ns.saturating_sub(t0_ns);
+        if ok {
+            self.ok[op].inc();
+            self.lat[op].observe(lat);
+        } else {
+            self.err[op].inc();
+        }
+        obs::record(Subsystem::Api, API_OPS[op], now_ns, arg, bytes, lat as f32, ok);
+    }
+}
+
 /// The emucxl library handle — everything of Table II hangs off this.
 #[derive(Debug)]
 pub struct EmucxlContext {
@@ -58,6 +117,7 @@ pub struct EmucxlContext {
     engine: TimingEngine,
     registry: Registry,
     fd: Option<Fd>,
+    obs: ApiObs,
 }
 
 impl EmucxlContext {
@@ -77,8 +137,13 @@ impl EmucxlContext {
             }
         };
         let fd = device.open();
-        let mut ctx =
-            Self { device, engine, registry: Registry::new(num_nodes), fd: Some(fd) };
+        let mut ctx = Self {
+            device,
+            engine,
+            registry: Registry::new(num_nodes),
+            fd: Some(fd),
+            obs: ApiObs::new(),
+        };
         ctx.charge_mmio(); // device open is a CXL.io config op
         Ok(ctx)
     }
@@ -128,6 +193,15 @@ impl EmucxlContext {
     /// `emucxl_alloc(size, node)` — mmap on the device with the node id in
     /// the offset argument (Figure 3).
     pub fn alloc(&mut self, size: usize, node: u32) -> Result<VAddr> {
+        let _op = obs::enter_op();
+        let t0 = self.now_ns();
+        let r = self.alloc_inner(size, node);
+        let arg = r.as_ref().map(|a| a.0).unwrap_or(0);
+        self.obs.record(OP_ALLOC, t0, self.now_ns(), arg, size as u64, r.is_ok());
+        r
+    }
+
+    fn alloc_inner(&mut self, size: usize, node: u32) -> Result<VAddr> {
         let fd = self.fd()?;
         let region = self.device.mmap(fd, size, node)?;
         self.registry.insert(region.addr, AllocMeta { size, node })?;
@@ -137,6 +211,15 @@ impl EmucxlContext {
 
     /// `emucxl_free(addr)` — unmap and forget an allocation (base address).
     pub fn free(&mut self, addr: VAddr) -> Result<()> {
+        let _op = obs::enter_op();
+        let t0 = self.now_ns();
+        let bytes = self.registry.get(addr).map(|m| m.size as u64).unwrap_or(0);
+        let r = self.free_inner(addr);
+        self.obs.record(OP_FREE, t0, self.now_ns(), addr.0, bytes, r.is_ok());
+        r
+    }
+
+    fn free_inner(&mut self, addr: VAddr) -> Result<()> {
         self.fd()?;
         self.registry.remove(addr)?;
         self.device.munmap(addr)?;
@@ -172,6 +255,17 @@ impl EmucxlContext {
     /// `emucxl_migrate(addr, node)`: allocate on `node`, move all data,
     /// free the source, return the new address.
     pub fn migrate(&mut self, addr: VAddr, node: u32) -> Result<VAddr> {
+        // The nested alloc/memcpy/free share this call's span.
+        let _op = obs::enter_op();
+        let t0 = self.now_ns();
+        let bytes = self.registry.get(addr).map(|m| m.size as u64).unwrap_or(0);
+        let r = self.migrate_inner(addr, node);
+        let arg = r.as_ref().map(|a| a.0).unwrap_or(addr.0);
+        self.obs.record(OP_MIGRATE, t0, self.now_ns(), arg, bytes, r.is_ok());
+        r
+    }
+
+    fn migrate_inner(&mut self, addr: VAddr, node: u32) -> Result<VAddr> {
         let meta = self.registry.get(addr)?;
         if meta.node == node {
             return Ok(addr); // already there — no-op, like the library
@@ -214,6 +308,14 @@ impl EmucxlContext {
 
     /// `emucxl_read(addr, 0, buf, buf.len())`.
     pub fn read(&mut self, addr: VAddr, buf: &mut [u8]) -> Result<f32> {
+        let _op = obs::enter_op();
+        let t0 = self.now_ns();
+        let r = self.read_inner(addr, buf);
+        self.obs.record(OP_READ, t0, self.now_ns(), addr.0, buf.len() as u64, r.is_ok());
+        r
+    }
+
+    fn read_inner(&mut self, addr: VAddr, buf: &mut [u8]) -> Result<f32> {
         self.fd()?;
         let path = self.device.read(addr, buf)?;
         Ok(self.charge(Op::Read, path, buf.len()))
@@ -226,6 +328,14 @@ impl EmucxlContext {
 
     /// `emucxl_write(buf, 0, addr, buf.len())`.
     pub fn write(&mut self, addr: VAddr, data: &[u8]) -> Result<f32> {
+        let _op = obs::enter_op();
+        let t0 = self.now_ns();
+        let r = self.write_inner(addr, data);
+        self.obs.record(OP_WRITE, t0, self.now_ns(), addr.0, data.len() as u64, r.is_ok());
+        r
+    }
+
+    fn write_inner(&mut self, addr: VAddr, data: &[u8]) -> Result<f32> {
         self.fd()?;
         let path = self.device.write(addr, data)?;
         Ok(self.charge(Op::Write, path, data.len()))

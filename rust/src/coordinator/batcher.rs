@@ -15,6 +15,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::error::Result;
+use crate::obs::{self, Subsystem};
 use crate::timing::desc::AccessDesc;
 use crate::timing::model::TimingParams;
 
@@ -151,9 +152,23 @@ fn flusher_main(
     });
     let flush_at = exec.as_ref().map(|e| e.batch().min(batch)).unwrap_or(batch).max(1);
 
+    let m = obs::metrics();
+    let flushes_total =
+        m.counter("emucxl_batcher_flushes_total", "timing batches flushed", &[]);
+    let timeout_flushes_total = m.counter(
+        "emucxl_batcher_timeout_flushes_total",
+        "timing batches flushed by max_wait expiry before filling",
+        &[],
+    );
+    let descs_total =
+        m.counter("emucxl_batcher_descs_total", "access descriptors priced", &[]);
+    let batch_size =
+        m.histogram("emucxl_batcher_batch_size", "descriptors per flushed batch", &[]);
+
     loop {
-        let work: Pending = {
+        let (work, timed_out): (Pending, bool) = {
             let mut g = shared.pending.lock().unwrap();
+            let mut timed_out = false;
             loop {
                 if shared.stop.load(Ordering::SeqCst) && g.descs.is_empty() {
                     return;
@@ -166,13 +181,14 @@ fn flusher_main(
                     let (ng, timeout) = shared.cv.wait_timeout(g, max_wait).unwrap();
                     g = ng;
                     if timeout.timed_out() && !g.descs.is_empty() {
+                        timed_out = true;
                         break;
                     }
                 } else {
                     g = shared.cv.wait(g).unwrap();
                 }
             }
-            std::mem::take(&mut *g)
+            (std::mem::take(&mut *g), timed_out)
         };
 
         let lats: Vec<f32> = match &exec {
@@ -193,6 +209,16 @@ fn flusher_main(
             s.0 += 1;
             s.1 += work.descs.len() as u64;
         }
+        let n = work.descs.len() as u64;
+        flushes_total.inc();
+        if timed_out {
+            timeout_flushes_total.inc();
+        }
+        descs_total.add(n);
+        batch_size.observe(n);
+        // ts 0: the flusher thread has no handle on any tenant's virtual clock.
+        let op = if timed_out { "timeout_flush" } else { "flush" };
+        obs::record(Subsystem::Batcher, op, 0, n, 0, 0.0, true);
         for (t, &l) in work.tickets.iter().zip(&lats) {
             t.fill(l);
         }

@@ -136,6 +136,22 @@ impl PoolClient {
         }
     }
 
+    /// Prometheus-style text exposition of the coordinator's metrics.
+    pub fn metrics(&mut self) -> Result<String> {
+        match self.call(Request::Metrics)? {
+            Response::Text { body } => Ok(body),
+            other => Err(unexpected(other)),
+        }
+    }
+
+    /// JSONL dump of the newest `max` flight-recorder events (0 = all).
+    pub fn trace_dump(&mut self, max: u32) -> Result<String> {
+        match self.call(Request::TraceDump { max })? {
+            Response::Text { body } => Ok(body),
+            other => Err(unexpected(other)),
+        }
+    }
+
     /// Graceful disconnect (also happens implicitly on drop/EOF).
     pub fn bye(mut self) -> Result<()> {
         let _ = self.call(Request::Bye)?;

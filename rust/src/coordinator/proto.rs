@@ -39,6 +39,12 @@ pub enum Request {
     KvDelete { key: Vec<u8> },
     /// Graceful disconnect.
     Bye,
+    /// Prometheus-style text exposition of every metric. Allowed before
+    /// `Hello` so scrapers need not register as tenants.
+    Metrics,
+    /// JSONL dump of the newest `max` flight-recorder events (0 = all).
+    /// Allowed before `Hello`.
+    TraceDump { max: u32 },
 }
 
 /// Coordinator -> client responses.
@@ -56,6 +62,8 @@ pub enum Response {
     Bool { value: bool },
     Stats { allocated: u64, page_bytes: u64, capacity: u64 },
     Error { msg: String },
+    /// Plain-text payload (metrics exposition, trace dump).
+    Text { body: String },
 }
 
 // ---------------------------------------------------------------------------
@@ -165,6 +173,8 @@ impl Request {
             Request::KvGet { key } => Enc::new(10).bytes(key).done(),
             Request::KvDelete { key } => Enc::new(11).bytes(key).done(),
             Request::Bye => Enc::new(12).done(),
+            Request::Metrics => Enc::new(13).done(),
+            Request::TraceDump { max } => Enc::new(14).u32(*max).done(),
         }
     }
 
@@ -184,6 +194,8 @@ impl Request {
             10 => Request::KvGet { key: d.bytes()? },
             11 => Request::KvDelete { key: d.bytes()? },
             12 => Request::Bye,
+            13 => Request::Metrics,
+            14 => Request::TraceDump { max: d.u32()? },
             t => return Err(EmucxlError::Protocol(format!("bad request tag {t}"))),
         };
         d.finish()?;
@@ -207,6 +219,7 @@ impl Response {
                 Enc::new(7).u64(*allocated).u64(*page_bytes).u64(*capacity).done()
             }
             Response::Error { msg } => Enc::new(8).bytes(msg.as_bytes()).done(),
+            Response::Text { body } => Enc::new(9).bytes(body.as_bytes()).done(),
         }
     }
 
@@ -231,6 +244,9 @@ impl Response {
             },
             8 => Response::Error {
                 msg: String::from_utf8_lossy(&d.bytes()?).into_owned(),
+            },
+            9 => Response::Text {
+                body: String::from_utf8_lossy(&d.bytes()?).into_owned(),
             },
             t => return Err(EmucxlError::Protocol(format!("bad response tag {t}"))),
         };
@@ -294,6 +310,9 @@ mod tests {
         roundtrip_req(Request::KvGet { key: vec![] });
         roundtrip_req(Request::KvDelete { key: b"x".to_vec() });
         roundtrip_req(Request::Bye);
+        roundtrip_req(Request::Metrics);
+        roundtrip_req(Request::TraceDump { max: 0 });
+        roundtrip_req(Request::TraceDump { max: u32::MAX });
     }
 
     #[test]
@@ -307,6 +326,10 @@ mod tests {
         roundtrip_resp(Response::Bool { value: true });
         roundtrip_resp(Response::Stats { allocated: 1, page_bytes: 2, capacity: 3 });
         roundtrip_resp(Response::Error { msg: "quota exceeded".into() });
+        roundtrip_resp(Response::Text { body: String::new() });
+        roundtrip_resp(Response::Text {
+            body: "emucxl_api_ops_total{op=\"alloc\"} 1\n".into(),
+        });
     }
 
     #[test]

@@ -14,9 +14,10 @@
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::api::{EmucxlContext, NODE_LOCAL};
 use crate::config::EmucxlConfig;
@@ -26,6 +27,7 @@ use crate::coordinator::tenant::TenantTable;
 use crate::error::{EmucxlError, Result};
 use crate::mem::vaspace::VAddr;
 use crate::middleware::kv::{GetPolicy, KvStore};
+use crate::obs::{self, Subsystem};
 use crate::timing::desc::AccessDesc;
 
 /// Coordinator configuration.
@@ -39,6 +41,8 @@ pub struct PoolConfig {
     pub batch: usize,
     /// Max time a descriptor waits for its batch to fill.
     pub max_wait: Duration,
+    /// On shutdown, dump the full flight-recorder ring (JSONL) here.
+    pub trace_dump: Option<PathBuf>,
 }
 
 impl Default for PoolConfig {
@@ -49,6 +53,7 @@ impl Default for PoolConfig {
             kv_policy: GetPolicy::Promote,
             batch: 64,
             max_wait: Duration::from_micros(200),
+            trace_dump: None,
         }
     }
 }
@@ -70,6 +75,7 @@ pub struct PoolServer {
     addr: SocketAddr,
     shared: Arc<SharedPool>,
     accept: Option<std::thread::JoinHandle<()>>,
+    trace_dump: Option<PathBuf>,
 }
 
 impl PoolServer {
@@ -106,7 +112,7 @@ impl PoolServer {
             .name("emucxl-accept".into())
             .spawn(move || accept_loop(listener, s2))
             .expect("spawn accept loop");
-        Ok(Self { addr, shared, accept: Some(accept) })
+        Ok(Self { addr, shared, accept: Some(accept), trace_dump: config.trace_dump })
     }
 
     /// Address clients should connect to.
@@ -129,7 +135,8 @@ impl PoolServer {
         self.shared.state.lock().unwrap().ctx.now_ns()
     }
 
-    /// Stop accepting and join the accept thread.
+    /// Stop accepting and join the accept thread. If the config named a
+    /// `trace_dump` path, the full flight-recorder ring is written there.
     pub fn shutdown(&mut self) {
         if self.shared.stop.swap(true, Ordering::SeqCst) {
             return;
@@ -138,6 +145,14 @@ impl PoolServer {
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept.take() {
             let _ = h.join();
+        }
+        let ts = self.shared.state.lock().unwrap().ctx.now_ns();
+        obs::record(Subsystem::Coordinator, "shutdown", ts, 0, 0, 0.0, true);
+        if let Some(path) = &self.trace_dump {
+            let dump = obs::recorder().dump_jsonl(usize::MAX);
+            if let Err(e) = std::fs::write(path, dump) {
+                eprintln!("emucxl: trace dump to {} failed: {e}", path.display());
+            }
         }
     }
 }
@@ -177,6 +192,82 @@ fn err_resp(e: &EmucxlError) -> Response {
     Response::Error { msg: e.to_string() }
 }
 
+fn op_name(req: &Request) -> &'static str {
+    match req {
+        Request::Hello { .. } => "hello",
+        Request::Alloc { .. } => "alloc",
+        Request::Free { .. } => "free",
+        Request::Read { .. } => "read",
+        Request::Write { .. } => "write",
+        Request::Migrate { .. } => "migrate",
+        Request::IsLocal { .. } => "is_local",
+        Request::Stats { .. } => "stats",
+        Request::KvPut { .. } => "kv_put",
+        Request::KvGet { .. } => "kv_get",
+        Request::KvDelete { .. } => "kv_delete",
+        Request::Bye => "bye",
+        Request::Metrics => "metrics",
+        Request::TraceDump { .. } => "trace_dump",
+    }
+}
+
+/// Per-request bookkeeping: coordinator counters/histograms, per-tenant
+/// series, and one flight-recorder event stamped with pool virtual time.
+fn record_request(
+    shared: &Arc<SharedPool>,
+    tenant_id: Option<u32>,
+    op: &'static str,
+    wall0: Instant,
+    ok: bool,
+) {
+    let m = obs::metrics();
+    let outcome = if ok { "ok" } else { "error" };
+    m.counter(
+        "emucxl_coordinator_requests_total",
+        "coordinator requests by op and outcome",
+        &[("op", op), ("outcome", outcome)],
+    )
+    .inc();
+    let wall_ns = wall0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+    m.histogram(
+        "emucxl_coordinator_request_wall_ns",
+        "wall-clock request handling latency",
+        &[("op", op)],
+    )
+    .observe(wall_ns);
+
+    let ts = {
+        let mut st = shared.state.lock().unwrap();
+        if let Some(id) = tenant_id {
+            let tenant = id.to_string();
+            let tenant: &str = tenant.as_str();
+            m.counter(
+                "emucxl_tenant_ops_total",
+                "coordinator requests by tenant and op",
+                &[("tenant", tenant), ("op", op)],
+            )
+            .inc();
+            if let Ok(t) = st.tenants.get_mut(id) {
+                let (quota, used) = (t.quota, t.used);
+                m.gauge(
+                    "emucxl_tenant_quota_bytes",
+                    "tenant byte quota",
+                    &[("tenant", tenant)],
+                )
+                .set(quota.min(i64::MAX as usize) as i64);
+                m.gauge(
+                    "emucxl_tenant_used_bytes",
+                    "tenant bytes charged against quota",
+                    &[("tenant", tenant)],
+                )
+                .set(used.min(i64::MAX as usize) as i64);
+            }
+        }
+        st.ctx.now_ns()
+    };
+    obs::record(Subsystem::Coordinator, op, ts, 0, 0, wall_ns as f32, ok);
+}
+
 fn node_flag(node: u32) -> u32 {
     if node == NODE_LOCAL {
         0
@@ -197,12 +288,19 @@ fn serve_connection(stream: TcpStream, shared: Arc<SharedPool>) -> Result<()> {
             None => break, // client hung up
         };
         let req = Request::decode(&frame)?;
+        let op = op_name(&req);
+        // One span per request; nested subsystem events share it.
+        let _span = obs::span(tenant_id.unwrap_or(0));
+        let wall0 = Instant::now();
         if matches!(req, Request::Bye) {
             write_frame(&mut writer, &Response::Ok { lat_ns: 0.0 }.encode())?;
+            record_request(&shared, tenant_id, op, wall0, true);
             break;
         }
         let resp = handle_request(&shared, &mut tenant_id, req);
+        let ok = !matches!(resp, Response::Error { .. });
         write_frame(&mut writer, &resp.encode())?;
+        record_request(&shared, tenant_id, op, wall0, ok);
         if shared.stop.load(Ordering::SeqCst) {
             break;
         }
@@ -216,6 +314,9 @@ fn serve_connection(stream: TcpStream, shared: Arc<SharedPool>) -> Result<()> {
                 let _ = st.ctx.free(VAddr(addr));
             }
         }
+        obs::metrics()
+            .gauge("emucxl_coordinator_tenants", "currently registered tenants", &[])
+            .set(st.tenants.len() as i64);
     }
     Ok(())
 }
@@ -225,8 +326,14 @@ fn handle_request(
     tenant_id: &mut Option<u32>,
     req: Request,
 ) -> Response {
-    // Hello is the only request valid before registration.
-    if tenant_id.is_none() && !matches!(req, Request::Hello { .. }) {
+    // Hello is the only request valid before registration, except the
+    // observability endpoints — scrapers need not be tenants.
+    if tenant_id.is_none()
+        && !matches!(
+            req,
+            Request::Hello { .. } | Request::Metrics | Request::TraceDump { .. }
+        )
+    {
         return Response::Error { msg: "not registered: send Hello first".into() };
     }
     match req {
@@ -234,7 +341,30 @@ fn handle_request(
             let mut st = shared.state.lock().unwrap();
             let id = st.tenants.register(quota as usize);
             *tenant_id = Some(id);
+            obs::metrics()
+                .gauge("emucxl_coordinator_tenants", "currently registered tenants", &[])
+                .set(st.tenants.len() as i64);
             Response::Welcome { tenant: id }
+        }
+        Request::Metrics => {
+            // Refresh point-in-time pool gauges under one lock, then render.
+            let m = obs::metrics();
+            {
+                let st = shared.state.lock().unwrap();
+                m.gauge("emucxl_coordinator_tenants", "currently registered tenants", &[])
+                    .set(st.tenants.len() as i64);
+                m.gauge(
+                    "emucxl_pool_virtual_time_ns",
+                    "virtual time of the shared pool",
+                    &[],
+                )
+                .set(st.ctx.now_ns().min(i64::MAX as u64) as i64);
+            }
+            Response::Text { body: m.render() }
+        }
+        Request::TraceDump { max } => {
+            let max = if max == 0 { usize::MAX } else { max as usize };
+            Response::Text { body: obs::recorder().dump_jsonl(max) }
         }
         Request::Alloc { size, node } => {
             let id = tenant_id.unwrap();

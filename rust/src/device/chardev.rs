@@ -10,6 +10,7 @@
 //! controller model that observes every access to CXL-backed nodes.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::device::controller::CxlController;
 use crate::error::{EmucxlError, Result};
@@ -17,6 +18,7 @@ use crate::mem::arena::NodeArena;
 use crate::mem::pagetable::PageTable;
 use crate::mem::vaspace::{VAddr, VaSpace};
 use crate::mem::pages_for;
+use crate::obs::{self, Counter, Gauge, Subsystem};
 use crate::topology::{MemoryKind, NumaTopology};
 
 /// A device file descriptor.
@@ -42,6 +44,98 @@ pub struct AccessPath {
     pub qdepth: f64,
 }
 
+/// Observability handles for the device + mem layers, resolved once at
+/// device construction so the access hot path is one atomic op per signal.
+#[derive(Debug)]
+struct DevObs {
+    mmap_total: Arc<Counter>,
+    munmap_total: Arc<Counter>,
+    io_ops: Arc<Counter>,
+    mem_reads: Arc<Counter>,
+    mem_writes: Arc<Counter>,
+    mem_read_bytes: Arc<Counter>,
+    mem_write_bytes: Arc<Counter>,
+    link_queue_depth: Arc<Gauge>,
+    va_maps: Arc<Counter>,
+    va_unmaps: Arc<Counter>,
+    /// Per-node arena occupancy, indexed by node id.
+    arena_used: Vec<Arc<Gauge>>,
+}
+
+impl DevObs {
+    fn new(arenas: &[NodeArena], topology: &NumaTopology) -> Self {
+        let m = obs::metrics();
+        let mut arena_used = Vec::with_capacity(arenas.len());
+        for node in topology.nodes() {
+            let label = node.id.to_string();
+            m.gauge(
+                "emucxl_mem_arena_capacity_bytes",
+                "per-node arena capacity in bytes",
+                &[("node", &label)],
+            )
+            .set(node.capacity.min(i64::MAX as usize) as i64);
+            arena_used.push(m.gauge(
+                "emucxl_mem_arena_used_bytes",
+                "per-node arena bytes currently allocated",
+                &[("node", &label)],
+            ));
+        }
+        Self {
+            mmap_total: m.counter(
+                "emucxl_device_mmap_total",
+                "mmap calls on the emulated device",
+                &[],
+            ),
+            munmap_total: m.counter(
+                "emucxl_device_munmap_total",
+                "munmap calls on the emulated device",
+                &[],
+            ),
+            io_ops: m.counter(
+                "emucxl_device_io_ops_total",
+                "CXL.io configuration-path operations",
+                &[],
+            ),
+            mem_reads: m.counter(
+                "emucxl_device_mem_ops_total",
+                "CXL.mem accesses crossing the controller",
+                &[("dir", "read")],
+            ),
+            mem_writes: m.counter(
+                "emucxl_device_mem_ops_total",
+                "CXL.mem accesses crossing the controller",
+                &[("dir", "write")],
+            ),
+            mem_read_bytes: m.counter(
+                "emucxl_device_mem_bytes_total",
+                "CXL.mem payload bytes crossing the controller",
+                &[("dir", "read")],
+            ),
+            mem_write_bytes: m.counter(
+                "emucxl_device_mem_bytes_total",
+                "CXL.mem payload bytes crossing the controller",
+                &[("dir", "write")],
+            ),
+            link_queue_depth: m.gauge(
+                "emucxl_device_link_queue_depth",
+                "CXL link outstanding-request estimate at the last access",
+                &[],
+            ),
+            va_maps: m.counter(
+                "emucxl_mem_vaspace_ops_total",
+                "virtual-address-space operations",
+                &[("op", "map")],
+            ),
+            va_unmaps: m.counter(
+                "emucxl_mem_vaspace_ops_total",
+                "virtual-address-space operations",
+                &[("op", "unmap")],
+            ),
+            arena_used,
+        }
+    }
+}
+
 /// The emulated device instance (one per emulated machine).
 #[derive(Debug)]
 pub struct EmucxlDevice {
@@ -58,15 +152,17 @@ pub struct EmucxlDevice {
     /// O(log n) — a per-free linear scan made teardown quadratic
     /// (EXPERIMENTS.md §Perf L3-2).
     fd_regions: HashMap<u64, u32>,
+    obs: DevObs,
 }
 
 impl EmucxlDevice {
     pub fn new(topology: NumaTopology, page_size: usize) -> Self {
-        let arenas = topology
+        let arenas: Vec<NodeArena> = topology
             .nodes()
             .iter()
             .map(|n| NodeArena::new(n.id, n.capacity, page_size))
             .collect();
+        let obs = DevObs::new(&arenas, &topology);
         Self {
             topology,
             arenas,
@@ -77,7 +173,13 @@ impl EmucxlDevice {
             next_fd: 3, // 0/1/2 are taken, as in a real process
             open_fds: Vec::new(),
             fd_regions: HashMap::new(),
+            obs,
         }
+    }
+
+    fn sync_arena_gauge(&self, node: u32) {
+        let used = self.arenas[node as usize].allocated_bytes();
+        self.obs.arena_used[node as usize].set(used.min(i64::MAX as usize) as i64);
     }
 
     pub fn topology(&self) -> &NumaTopology {
@@ -102,6 +204,7 @@ impl EmucxlDevice {
         self.next_fd += 1;
         self.open_fds.push(fd.0);
         self.controller.record_io();
+        self.obs.io_ops.inc();
         fd
     }
 
@@ -119,6 +222,7 @@ impl EmucxlDevice {
         self.check_fd(fd)?;
         self.open_fds.retain(|&f| f != fd.0);
         self.controller.record_io();
+        self.obs.io_ops.inc();
         let leaked: Vec<VAddr> = self
             .fd_regions
             .iter()
@@ -162,6 +266,13 @@ impl EmucxlDevice {
         self.fd_regions.insert(addr.0, fd.0);
         // Mapping setup is a configuration-path operation.
         self.controller.record_io();
+        self.obs.io_ops.inc();
+        self.obs.mmap_total.inc();
+        self.obs.va_maps.inc();
+        self.sync_arena_gauge(node);
+        let ts = self.controller.last_advance_ns();
+        obs::record(Subsystem::Device, "mmap", ts, addr.0, len as u64, 0.0, true);
+        obs::record(Subsystem::Mem, "va_map", ts, addr.0, len as u64, 0.0, true);
         Ok(MappedRegion { addr, node, len, pages })
     }
 
@@ -172,6 +283,14 @@ impl EmucxlDevice {
         self.vaspace.free(addr, extent.pages * self.page_size)?;
         self.fd_regions.remove(&addr.0);
         self.controller.record_io();
+        self.obs.io_ops.inc();
+        self.obs.munmap_total.inc();
+        self.obs.va_unmaps.inc();
+        self.sync_arena_gauge(extent.node);
+        let ts = self.controller.last_advance_ns();
+        let bytes = (extent.pages * self.page_size) as u64;
+        obs::record(Subsystem::Device, "munmap", ts, addr.0, bytes, 0.0, true);
+        obs::record(Subsystem::Mem, "va_unmap", ts, addr.0, bytes, 0.0, true);
         Ok(())
     }
 
@@ -183,6 +302,16 @@ impl EmucxlDevice {
     fn classify(&mut self, node: u32, is_write: bool, bytes: usize) -> AccessPath {
         let via_cxl = self.topology.nodes()[node as usize].kind == MemoryKind::CxlMem;
         let qdepth = if via_cxl { self.controller.record_mem(is_write, bytes) } else { 0.0 };
+        if via_cxl {
+            let (ops, byte_ctr) = if is_write {
+                (&self.obs.mem_writes, &self.obs.mem_write_bytes)
+            } else {
+                (&self.obs.mem_reads, &self.obs.mem_read_bytes)
+            };
+            ops.inc();
+            byte_ctr.add(bytes as u64);
+            self.obs.link_queue_depth.set(self.controller.queue_depth() as i64);
+        }
         AccessPath { node, via_cxl, qdepth }
     }
 

@@ -69,6 +69,12 @@ impl CxlController {
         self.inflight
     }
 
+    /// Virtual-time stamp of the last drain — the controller's best notion
+    /// of "now" (used to timestamp device-layer trace events).
+    pub fn last_advance_ns(&self) -> u64 {
+        self.last_drain_ns
+    }
+
     /// Drain the in-flight estimate up to virtual time `now_ns`.
     pub fn advance_to(&mut self, now_ns: u64) {
         if now_ns > self.last_drain_ns {

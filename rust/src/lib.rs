@@ -17,6 +17,22 @@
 //! Python never runs on the request path: `make artifacts` lowers the
 //! compute graphs once; the Rust binary is self-contained afterwards.
 //!
+//! ## Observability
+//!
+//! The [`obs`] module is the measurement substrate for the whole stack: a
+//! process-wide metrics registry (counters/gauges/histograms with
+//! Prometheus text exposition) plus a fixed-capacity flight recorder of
+//! structured trace events. Instrumentation covers the device layer
+//! (mmap/munmap, CXL link queue depth, protocol counters), memory
+//! management (arena occupancy, vaspace map/unmap), every `EmucxlContext`
+//! API call (outcome + virtual-clock latency), the middleware (KV
+//! hit/miss/promote, slab occupancy, queue depth), and the coordinator
+//! (per-tenant op counts, quota usage, request latency, batcher flush
+//! behavior). Scrape a running pool with `emucxl serve` in one terminal
+//! and `emucxl stats` (add `--raw` for Prometheus text, `--trace N` for a
+//! JSONL event dump) in another; the same data is available over the wire
+//! via `coordinator::proto::Request::{Metrics, TraceDump}`.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -42,6 +58,7 @@ pub mod error;
 pub mod experiments;
 pub mod mem;
 pub mod middleware;
+pub mod obs;
 pub mod runtime;
 pub mod stats;
 pub mod timing;

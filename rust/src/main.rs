@@ -7,14 +7,18 @@
 //! emucxl selftest [--artifacts DIR]   native vs XLA parity check
 //! emucxl table3 [--ops N --trials T]  paper Table III (queue)
 //! emucxl table4 [--gets N]            paper Table IV (KV policies)
-//! emucxl serve [--port P] [--artifacts DIR]   pool coordinator daemon
+//! emucxl serve [--port P] [--artifacts DIR] [--trace-dump FILE] [--no-warmup]
+//!                                     pool coordinator daemon
+//! emucxl stats [--host H --port P] [--raw] [--trace N]
+//!                                     metrics/trace of a running daemon
 //! emucxl replay --trace FILE [--artifacts DIR] trace through window model
 //! emucxl calibrate --local NS --remote NS [--artifacts DIR]
 //! ```
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use emucxl::config::EmucxlConfig;
+use emucxl::coordinator::client::PoolClient;
 use emucxl::coordinator::server::{PoolConfig, PoolServer};
 use emucxl::error::Result;
 use emucxl::experiments::{
@@ -123,10 +127,50 @@ fn cmd_table4(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Exercise every instrumented subsystem once so a freshly started daemon
+/// exposes the full metric schema (and at least one trace event per
+/// subsystem) before the first real request arrives.
+fn warmup() -> Result<()> {
+    use emucxl::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
+    use emucxl::middleware::kv::{GetPolicy, KvStore};
+    use emucxl::middleware::queue::{EmucxlQueue, QueuePolicy};
+    use emucxl::middleware::slab::SlabAllocator;
+
+    let mut ctx = EmucxlContext::init(EmucxlConfig::sized(4 << 20, 16 << 20))?;
+    let a = ctx.alloc(4096, NODE_LOCAL)?;
+    ctx.write(a, &[7u8; 64])?;
+    let mut buf = [0u8; 64];
+    ctx.read(a, &mut buf)?;
+    let a = ctx.migrate(a, NODE_REMOTE)?;
+    ctx.free(a)?;
+
+    let mut kv = KvStore::new(2, GetPolicy::Promote);
+    kv.put(&mut ctx, b"warmup", b"1")?;
+    let _ = kv.get(&mut ctx, b"warmup")?;
+    let _ = kv.get(&mut ctx, b"missing")?; // a miss, on purpose
+    let _ = kv.delete(&mut ctx, b"warmup")?;
+
+    let mut q = EmucxlQueue::new(QueuePolicy::AllRemote);
+    q.enqueue(&mut ctx, 1)?;
+    let _ = q.dequeue(&mut ctx)?;
+
+    let mut slab = SlabAllocator::new();
+    let s = slab.alloc(&mut ctx, 128, NODE_LOCAL)?;
+    slab.free(&mut ctx, s)?;
+    Ok(())
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    emucxl::obs::install_panic_hook();
     let mut cfg = PoolConfig::default();
     if let Some(dir) = flags.get("artifacts") {
         cfg.emucxl = cfg.emucxl.with_artifacts(dir.clone());
+    }
+    if let Some(path) = flags.get("trace-dump") {
+        cfg.trace_dump = Some(path.into());
+    }
+    if !flags.contains_key("no-warmup") {
+        warmup()?;
     }
     let port = get(flags, "port", 7117u16);
     let server = PoolServer::start(cfg, port)?;
@@ -135,6 +179,207 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_stats(flags: &HashMap<String, String>) -> Result<()> {
+    let host = flags.get("host").cloned().unwrap_or_else(|| "127.0.0.1".into());
+    let port = get(flags, "port", 7117u16);
+    let addr: std::net::SocketAddr = format!("{host}:{port}").parse().map_err(|_| {
+        emucxl::error::EmucxlError::InvalidArgument(format!("bad --host {host}"))
+    })?;
+    let mut client = PoolClient::connect(addr, 1 << 20)?;
+    let text = client.metrics()?;
+    if flags.contains_key("raw") {
+        print!("{text}");
+    } else {
+        print!("{}", pretty_metrics(&text));
+    }
+    if let Some(n) = flags.get("trace") {
+        let max: u32 = n.parse().unwrap_or(0); // bare --trace = all
+        let dump = client.trace_dump(max)?;
+        println!("--- trace ({} events) ---", dump.lines().count());
+        print!("{dump}");
+    }
+    let _ = client.bye();
+    Ok(())
+}
+
+/// Parse the inside of a `{...}` label block, honouring `\"` etc.
+fn parse_labels(s: &str) -> Vec<(String, String)> {
+    let b: Vec<char> = s.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let start = i;
+        while i < b.len() && b[i] != '=' {
+            i += 1;
+        }
+        let key: String = b[start..i].iter().collect::<String>().trim().to_string();
+        i += 1;
+        if i < b.len() && b[i] == '"' {
+            i += 1;
+        }
+        let mut val = String::new();
+        while i < b.len() && b[i] != '"' {
+            if b[i] == '\\' && i + 1 < b.len() {
+                i += 1;
+                match b[i] {
+                    'n' => val.push('\n'),
+                    c => val.push(c),
+                }
+            } else {
+                val.push(b[i]);
+            }
+            i += 1;
+        }
+        i += 1; // closing quote
+        if i < b.len() && b[i] == ',' {
+            i += 1;
+        }
+        if !key.is_empty() {
+            out.push((key, val));
+        }
+    }
+    out
+}
+
+fn fmt_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// First bucket bound at which the cumulative count reaches quantile `q`.
+fn quantile(buckets: &[(f64, f64)], q: f64) -> f64 {
+    let total = buckets.last().map(|b| b.1).unwrap_or(0.0);
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let target = q * total;
+    for &(bound, cum) in buckets {
+        if cum >= target {
+            return bound;
+        }
+    }
+    f64::INFINITY
+}
+
+fn fmt_ns(v: f64) -> String {
+    if v.is_infinite() {
+        "inf".into()
+    } else if v >= 1e9 {
+        format!("{:.2}s", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}ms", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}us", v / 1e3)
+    } else {
+        format!("{v:.0}ns")
+    }
+}
+
+/// Human-oriented rendering of a Prometheus text exposition: families with
+/// their help strings, histograms collapsed to count/mean/p50/p99.
+fn pretty_metrics(text: &str) -> String {
+    #[derive(Default)]
+    struct Family {
+        kind: String,
+        help: String,
+        /// plain series: rendered label block -> value
+        plain: Vec<(String, f64)>,
+        /// histogram state keyed by label block without `le`
+        hist: BTreeMap<String, (Vec<(f64, f64)>, f64, f64)>,
+    }
+    let mut fams: BTreeMap<String, Family> = BTreeMap::new();
+
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            if let Some((name, help)) = rest.split_once(' ') {
+                fams.entry(name.to_string()).or_default().help = help.to_string();
+            }
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            if let Some((name, kind)) = rest.split_once(' ') {
+                fams.entry(name.to_string()).or_default().kind = kind.to_string();
+            }
+        } else if !line.is_empty() && !line.starts_with('#') {
+            let (key, val) = match line.rsplit_once(' ') {
+                Some(x) => x,
+                None => continue,
+            };
+            let value: f64 = val.parse().unwrap_or(0.0);
+            let (base, labels) = match key.split_once('{') {
+                Some((b, rest)) => {
+                    (b.to_string(), parse_labels(rest.trim_end_matches('}')))
+                }
+                None => (key.to_string(), Vec::new()),
+            };
+            // histogram sub-series roll up under the family name
+            let fam_name = ["_bucket", "_sum", "_count"]
+                .iter()
+                .find_map(|suf| base.strip_suffix(suf))
+                .filter(|f| {
+                    fams.get(*f).map(|x| x.kind == "histogram").unwrap_or(false)
+                })
+                .unwrap_or(&base)
+                .to_string();
+            let fam = fams.entry(fam_name.clone()).or_default();
+            if fam.kind == "histogram" {
+                let mut labels = labels;
+                let mut le = None;
+                labels.retain(|(k, v)| {
+                    if k == "le" {
+                        le = Some(v.clone());
+                        false
+                    } else {
+                        true
+                    }
+                });
+                let entry = fam.hist.entry(fmt_labels(&labels)).or_default();
+                if base.ends_with("_bucket") {
+                    let bound = match le.as_deref() {
+                        Some("+Inf") | None => f64::INFINITY,
+                        Some(s) => s.parse().unwrap_or(f64::INFINITY),
+                    };
+                    entry.0.push((bound, value));
+                } else if base.ends_with("_sum") {
+                    entry.1 = value;
+                } else if base.ends_with("_count") {
+                    entry.2 = value;
+                }
+            } else {
+                fam.plain.push((fmt_labels(&labels), value));
+            }
+        }
+    }
+
+    let mut out = String::new();
+    for (name, fam) in &fams {
+        if fam.plain.is_empty() && fam.hist.is_empty() {
+            continue;
+        }
+        let kind = if fam.kind.is_empty() { "untyped" } else { &fam.kind };
+        out.push_str(&format!("{name} ({kind}) — {}\n", fam.help));
+        for (labels, value) in &fam.plain {
+            let shown = if labels.is_empty() { "(no labels)" } else { labels.as_str() };
+            out.push_str(&format!("  {shown} = {value}\n"));
+        }
+        for (labels, (buckets, sum, count)) in &fam.hist {
+            let mut buckets = buckets.clone();
+            buckets.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mean = if *count > 0.0 { sum / count } else { 0.0 };
+            let shown = if labels.is_empty() { "(no labels)" } else { labels.as_str() };
+            out.push_str(&format!(
+                "  {shown} count={count} mean={} p50={} p99={}\n",
+                fmt_ns(mean),
+                fmt_ns(quantile(&buckets, 0.50)),
+                fmt_ns(quantile(&buckets, 0.99)),
+            ));
+        }
+    }
+    out
 }
 
 fn cmd_replay(flags: &HashMap<String, String>) -> Result<()> {
@@ -219,11 +464,25 @@ fn cmd_calibrate(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+const USAGE: &str = "usage: emucxl <command> [--flags]
+
+commands:
+  info                          topology + artifact status
+  selftest [--artifacts DIR]    native vs XLA parity check
+  table3 [--ops N --trials T]   paper Table III (queue)
+  table4 [--gets N]             paper Table IV (KV policies)
+  serve [--port P] [--artifacts DIR] [--trace-dump FILE] [--no-warmup]
+                                pool coordinator daemon
+  stats [--host H --port P] [--raw] [--trace N]
+                                metrics/trace of a running daemon
+  replay --trace FILE [--artifacts DIR]
+                                trace through the window model
+  calibrate --local NS --remote NS [--artifacts DIR]
+                                fit timing params to target latencies
+";
+
 fn usage() -> ! {
-    eprintln!(
-        "usage: emucxl <info|selftest|table3|table4|serve|replay|calibrate> [--flags]\n\
-         see module docs in rust/src/main.rs for flag lists"
-    );
+    eprint!("{USAGE}");
     std::process::exit(2);
 }
 
@@ -233,6 +492,10 @@ fn main() {
         Some(c) => c.as_str(),
         None => usage(),
     };
+    if matches!(cmd, "help" | "--help" | "-h") {
+        print!("{USAGE}");
+        return;
+    }
     let flags = parse_flags(&args[1..]);
     let result = match cmd {
         "info" => cmd_info(&flags),
@@ -240,6 +503,7 @@ fn main() {
         "table3" => cmd_table3(&flags),
         "table4" => cmd_table4(&flags),
         "serve" => cmd_serve(&flags),
+        "stats" => cmd_stats(&flags),
         "replay" => cmd_replay(&flags),
         "calibrate" => cmd_calibrate(&flags),
         _ => usage(),

@@ -12,12 +12,14 @@
 //! under remote hits is governed by [`GetPolicy`].
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
 use crate::error::{EmucxlError, Result};
 use crate::mem::vaspace::VAddr;
 use crate::middleware::kv::lru::LruList;
 use crate::middleware::kv::policy::GetPolicy;
+use crate::obs::{self, Counter, Gauge, Subsystem};
 
 /// Object header stored in emulated memory ahead of key/value bytes.
 const HDR: usize = 8; // key_len u32 | val_len u32
@@ -68,6 +70,59 @@ impl KvStats {
     }
 }
 
+/// Observability handles mirroring [`KvStats`] into the global registry,
+/// resolved once at store construction.
+#[derive(Debug)]
+struct KvObs {
+    puts: Arc<Counter>,
+    gets: Arc<Counter>,
+    deletes: Arc<Counter>,
+    local_hits: Arc<Counter>,
+    remote_hits: Arc<Counter>,
+    misses: Arc<Counter>,
+    evictions: Arc<Counter>,
+    promotions: Arc<Counter>,
+    objects_local: Arc<Gauge>,
+    objects_remote: Arc<Gauge>,
+}
+
+impl KvObs {
+    fn new() -> Self {
+        let m = obs::metrics();
+        const OPS: &str = "emucxl_kv_ops_total";
+        const OPS_HELP: &str = "KV store operations by op";
+        const GETS: &str = "emucxl_kv_gets_total";
+        const GETS_HELP: &str = "KV GETs by result tier";
+        const OBJS: &str = "emucxl_kv_objects";
+        const OBJS_HELP: &str = "objects currently held per tier";
+        Self {
+            puts: m.counter(OPS, OPS_HELP, &[("op", "put")]),
+            gets: m.counter(OPS, OPS_HELP, &[("op", "get")]),
+            deletes: m.counter(OPS, OPS_HELP, &[("op", "delete")]),
+            local_hits: m.counter(GETS, GETS_HELP, &[("result", "local_hit")]),
+            remote_hits: m.counter(GETS, GETS_HELP, &[("result", "remote_hit")]),
+            misses: m.counter(GETS, GETS_HELP, &[("result", "miss")]),
+            evictions: m.counter(
+                "emucxl_kv_evictions_total",
+                "objects evicted from local to remote memory",
+                &[],
+            ),
+            promotions: m.counter(
+                "emucxl_kv_promotions_total",
+                "objects promoted from remote to local memory",
+                &[],
+            ),
+            objects_local: m.gauge(OBJS, OBJS_HELP, &[("tier", "local")]),
+            objects_remote: m.gauge(OBJS, OBJS_HELP, &[("tier", "remote")]),
+        }
+    }
+
+    fn sync_objects(&self, local: usize, remote: usize) {
+        self.objects_local.set(local as i64);
+        self.objects_remote.set(remote as i64);
+    }
+}
+
 /// The emucxl-backed key-value store.
 #[derive(Debug)]
 pub struct KvStore {
@@ -82,6 +137,7 @@ pub struct KvStore {
     /// and local hits do not — see EXPERIMENTS.md §Table IV.
     refresh_on_get: bool,
     stats: KvStats,
+    obs: KvObs,
 }
 
 impl KvStore {
@@ -97,6 +153,7 @@ impl KvStore {
             policy,
             refresh_on_get: true,
             stats: KvStats::default(),
+            obs: KvObs::new(),
         }
     }
 
@@ -165,6 +222,7 @@ impl KvStore {
         e.tier = Tier::Remote;
         e.token = self.remote_lru.push_front(key);
         self.stats.evictions += 1;
+        self.obs.evictions.inc();
         Ok(())
     }
 
@@ -181,6 +239,7 @@ impl KvStore {
         e.tier = Tier::Local;
         e.token = self.local_lru.push_front(key.to_vec());
         self.stats.promotions += 1;
+        self.obs.promotions.inc();
         Ok(())
     }
 
@@ -188,6 +247,23 @@ impl KvStore {
     /// position; evict LRU to remote if over capacity. Existing keys are
     /// updated in place (and refreshed to local MRU).
     pub fn put(&mut self, ctx: &mut EmucxlContext, key: &[u8], value: &[u8]) -> Result<()> {
+        let _op = obs::enter_op();
+        let r = self.put_impl(ctx, key, value);
+        self.obs.puts.inc();
+        self.obs.sync_objects(self.local_lru.len(), self.remote_lru.len());
+        obs::record(
+            Subsystem::Kv,
+            "put",
+            ctx.now_ns(),
+            key.len() as u64,
+            value.len() as u64,
+            0.0,
+            r.is_ok(),
+        );
+        r
+    }
+
+    fn put_impl(&mut self, ctx: &mut EmucxlContext, key: &[u8], value: &[u8]) -> Result<()> {
         if key.is_empty() {
             return Err(EmucxlError::InvalidArgument("empty key".into()));
         }
@@ -220,6 +296,27 @@ impl KvStore {
     /// Listing 3 GET: search local, then remote; remote-hit behaviour per
     /// policy. Returns `None` on miss (paper returns NULL).
     pub fn get(&mut self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        let _op = obs::enter_op();
+        let r = self.get_impl(ctx, key);
+        self.obs.gets.inc();
+        self.obs.sync_objects(self.local_lru.len(), self.remote_lru.len());
+        let bytes = match &r {
+            Ok(Some(v)) => v.len() as u64,
+            _ => 0,
+        };
+        obs::record(
+            Subsystem::Kv,
+            "get",
+            ctx.now_ns(),
+            key.len() as u64,
+            bytes,
+            0.0,
+            r.is_ok(),
+        );
+        r
+    }
+
+    fn get_impl(&mut self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<Option<Vec<u8>>> {
         self.stats.gets += 1;
         let (tier, access_count) = match self.index.get_mut(key) {
             Some(e) => {
@@ -228,12 +325,14 @@ impl KvStore {
             }
             None => {
                 self.stats.misses += 1;
+                self.obs.misses.inc();
                 return Ok(None);
             }
         };
         match tier {
             Tier::Local => {
                 self.stats.local_hits += 1;
+                self.obs.local_hits.inc();
                 let e = self.index.get(key).unwrap();
                 let token = e.token;
                 let value = Self::read_value(ctx, e)?;
@@ -244,6 +343,7 @@ impl KvStore {
             }
             Tier::Remote => {
                 self.stats.remote_hits += 1;
+                self.obs.remote_hits.inc();
                 if self.policy.promote_on_get(access_count) {
                     self.promote(ctx, key)?;
                 } else {
@@ -276,8 +376,13 @@ impl KvStore {
 
     /// Listing 4 DELETE: search both tiers, free the object.
     pub fn delete(&mut self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<bool> {
+        let _op = obs::enter_op();
         self.stats.deletes += 1;
-        self.delete_inner(ctx, key)
+        let r = self.delete_inner(ctx, key);
+        self.obs.deletes.inc();
+        self.obs.sync_objects(self.local_lru.len(), self.remote_lru.len());
+        obs::record(Subsystem::Kv, "delete", ctx.now_ns(), key.len() as u64, 0, 0.0, r.is_ok());
+        r
     }
 
     /// Where a key currently lives (diagnostics / tests).

@@ -10,9 +10,12 @@
 //! Node layout in emulated memory (little-endian):
 //! `[ data: i64 | next: u64 ]` — 16 bytes.
 
+use std::sync::Arc;
+
 use crate::api::EmucxlContext;
 use crate::error::Result;
 use crate::mem::vaspace::VAddr;
+use crate::obs::{self, Counter, Gauge, Subsystem};
 
 /// Placement policy for queue nodes (paper: chosen at init).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,6 +36,27 @@ impl QueuePolicy {
 const NODE_SIZE: usize = 16;
 const NIL: u64 = 0;
 
+/// Observability handles for the queue middleware.
+#[derive(Debug)]
+struct QueueObs {
+    enqueues: Arc<Counter>,
+    dequeues: Arc<Counter>,
+    depth: Arc<Gauge>,
+}
+
+impl QueueObs {
+    fn new() -> Self {
+        let m = obs::metrics();
+        const OPS: &str = "emucxl_queue_ops_total";
+        const OPS_HELP: &str = "queue middleware operations by op";
+        Self {
+            enqueues: m.counter(OPS, OPS_HELP, &[("op", "enqueue")]),
+            dequeues: m.counter(OPS, OPS_HELP, &[("op", "dequeue")]),
+            depth: m.gauge("emucxl_queue_depth", "nodes currently in the queue", &[]),
+        }
+    }
+}
+
 /// A FIFO queue whose nodes live in emucxl (dis)aggregated memory.
 #[derive(Debug)]
 pub struct EmucxlQueue {
@@ -40,12 +64,13 @@ pub struct EmucxlQueue {
     front: u64,
     rear: u64,
     count: usize,
+    obs: QueueObs,
 }
 
 impl EmucxlQueue {
     /// Listing 1 `initQueue`: choose local or remote placement up front.
     pub fn new(policy: QueuePolicy) -> Self {
-        Self { policy, front: NIL, rear: NIL, count: 0 }
+        Self { policy, front: NIL, rear: NIL, count: 0, obs: QueueObs::new() }
     }
 
     pub fn len(&self) -> usize {
@@ -78,6 +103,23 @@ impl EmucxlQueue {
 
     /// Listing 1 `enqueue`: `createNode` via emucxl_alloc + link at rear.
     pub fn enqueue(&mut self, ctx: &mut EmucxlContext, data: i64) -> Result<()> {
+        let _op = obs::enter_op();
+        let r = self.enqueue_inner(ctx, data);
+        self.obs.enqueues.inc();
+        self.obs.depth.set(self.count as i64);
+        obs::record(
+            Subsystem::Queue,
+            "enqueue",
+            ctx.now_ns(),
+            data as u64,
+            NODE_SIZE as u64,
+            0.0,
+            r.is_ok(),
+        );
+        r
+    }
+
+    fn enqueue_inner(&mut self, ctx: &mut EmucxlContext, data: i64) -> Result<()> {
         let addr = ctx.alloc(NODE_SIZE, self.policy.node())?;
         Self::write_node(ctx, addr, data, NIL)?;
         if self.rear == NIL {
@@ -97,6 +139,27 @@ impl EmucxlQueue {
     /// Listing 1 `dequeue`: unlink front + emucxl_free. Returns the value,
     /// or `None` on an empty queue (the paper returns 0).
     pub fn dequeue(&mut self, ctx: &mut EmucxlContext) -> Result<Option<i64>> {
+        let _op = obs::enter_op();
+        let r = self.dequeue_inner(ctx);
+        self.obs.dequeues.inc();
+        self.obs.depth.set(self.count as i64);
+        let arg = match &r {
+            Ok(Some(v)) => *v as u64,
+            _ => 0,
+        };
+        obs::record(
+            Subsystem::Queue,
+            "dequeue",
+            ctx.now_ns(),
+            arg,
+            NODE_SIZE as u64,
+            0.0,
+            r.is_ok(),
+        );
+        r
+    }
+
+    fn dequeue_inner(&mut self, ctx: &mut EmucxlContext) -> Result<Option<i64>> {
         if self.front == NIL {
             return Ok(None);
         }

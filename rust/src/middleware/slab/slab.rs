@@ -9,10 +9,12 @@
 //! largest class fall through to `emucxl_alloc` directly.
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
 
 use crate::api::EmucxlContext;
 use crate::error::{EmucxlError, Result};
 use crate::mem::vaspace::VAddr;
+use crate::obs::{self, Counter, Gauge, Subsystem};
 
 /// Pages per slab (16 KiB slabs with the default 4 KiB pages).
 pub const SLAB_PAGES: usize = 4;
@@ -68,6 +70,41 @@ impl SlabStats {
     }
 }
 
+/// Observability handles for the slab middleware. Implements `Default`
+/// manually (resolving registry handles) so `SlabAllocator` can keep its
+/// derived `Default`.
+#[derive(Debug)]
+struct SlabObs {
+    allocs: Arc<Counter>,
+    frees: Arc<Counter>,
+    backend_allocs: Arc<Counter>,
+    slab_bytes: Arc<Gauge>,
+    used_bytes: Arc<Gauge>,
+}
+
+impl Default for SlabObs {
+    fn default() -> Self {
+        let m = obs::metrics();
+        const OPS: &str = "emucxl_slab_ops_total";
+        const OPS_HELP: &str = "slab allocator operations by op";
+        Self {
+            allocs: m.counter(OPS, OPS_HELP, &[("op", "alloc")]),
+            frees: m.counter(OPS, OPS_HELP, &[("op", "free")]),
+            backend_allocs: m.counter(
+                "emucxl_slab_backend_allocs_total",
+                "emucxl_alloc calls issued by the slab allocator",
+                &[],
+            ),
+            slab_bytes: m.gauge("emucxl_slab_bytes", "bytes held in slabs", &[]),
+            used_bytes: m.gauge(
+                "emucxl_slab_used_bytes",
+                "slab bytes currently handed out",
+                &[],
+            ),
+        }
+    }
+}
+
 /// Slab allocator over emucxl memory. One instance manages both nodes.
 #[derive(Debug, Default)]
 pub struct SlabAllocator {
@@ -80,6 +117,7 @@ pub struct SlabAllocator {
     large: HashMap<u64, usize>,
     stats: SlabStats,
     slab_bytes: usize,
+    obs: SlabObs,
 }
 
 impl SlabAllocator {
@@ -99,6 +137,7 @@ impl SlabAllocator {
         let bytes = SLAB_PAGES * ctx.device().page_size();
         let base = ctx.alloc(bytes, node)?;
         self.stats.backend_allocs += 1;
+        self.obs.backend_allocs.inc();
         let chunks = bytes / chunk;
         let slab = Slab {
             base,
@@ -119,6 +158,21 @@ impl SlabAllocator {
     /// Allocate `size` bytes on `node`. Small sizes come from slabs;
     /// sizes above [`MAX_CLASS`] go straight to `emucxl_alloc`.
     pub fn alloc(&mut self, ctx: &mut EmucxlContext, size: usize, node: u32) -> Result<VAddr> {
+        let _op = obs::enter_op();
+        let r = self.alloc_inner(ctx, size, node);
+        self.obs.allocs.inc();
+        self.sync_gauges();
+        let arg = r.as_ref().map(|a| a.0).unwrap_or(0);
+        obs::record(Subsystem::Slab, "alloc", ctx.now_ns(), arg, size as u64, 0.0, r.is_ok());
+        r
+    }
+
+    fn sync_gauges(&self) {
+        self.obs.slab_bytes.set(self.slab_bytes.min(i64::MAX as usize) as i64);
+        self.obs.used_bytes.set(self.stats.used_bytes.min(i64::MAX as usize) as i64);
+    }
+
+    fn alloc_inner(&mut self, ctx: &mut EmucxlContext, size: usize, node: u32) -> Result<VAddr> {
         if size == 0 {
             return Err(EmucxlError::InvalidArgument("slab alloc of 0 bytes".into()));
         }
@@ -127,6 +181,7 @@ impl SlabAllocator {
             None => {
                 let addr = ctx.alloc(size, node)?;
                 self.stats.backend_allocs += 1;
+                self.obs.backend_allocs.inc();
                 self.large.insert(addr.0, size);
                 return Ok(addr);
             }
@@ -161,6 +216,15 @@ impl SlabAllocator {
     /// Free an address previously returned by [`Self::alloc`]. Empty slabs
     /// are returned to emucxl (one empty slab per class is kept warm).
     pub fn free(&mut self, ctx: &mut EmucxlContext, addr: VAddr) -> Result<()> {
+        let _op = obs::enter_op();
+        let r = self.free_inner(ctx, addr);
+        self.obs.frees.inc();
+        self.sync_gauges();
+        obs::record(Subsystem::Slab, "free", ctx.now_ns(), addr.0, 0, 0.0, r.is_ok());
+        r
+    }
+
+    fn free_inner(&mut self, ctx: &mut EmucxlContext, addr: VAddr) -> Result<()> {
         self.stats.free_calls += 1;
         if let Some(size) = self.large.remove(&addr.0) {
             ctx.free_sized(addr, size)?;

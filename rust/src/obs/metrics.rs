@@ -1,0 +1,394 @@
+//! Metrics registry: named counters / gauges / histograms with
+//! Prometheus-style text exposition.
+//!
+//! Design goals, in order: (1) hot paths pay one relaxed atomic op —
+//! instruments are resolved to `Arc` handles once, at construction time of
+//! the instrumented object; (2) exposition output is deterministic —
+//! families are kept in a `BTreeMap` and series are sorted by label set at
+//! render time; (3) std-only.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge: a value that can go up and down.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, v: i64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, v: i64) {
+        self.0.fetch_sub(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Upper bounds of the histogram buckets (exclusive of `+Inf`): powers of
+/// four starting at 16. Sized for nanosecond latencies — 16 ns up to ~17 s.
+pub const BUCKET_BOUNDS: [u64; 16] = [
+    16,
+    64,
+    256,
+    1024,
+    4096,
+    16_384,
+    65_536,
+    262_144,
+    1_048_576,
+    4_194_304,
+    16_777_216,
+    67_108_864,
+    268_435_456,
+    1_073_741_824,
+    4_294_967_296,
+    17_179_869_184,
+];
+
+/// Fixed-bucket histogram (cumulative exposition, `le` label).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKET_BOUNDS.len()],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        if let Some(i) = BUCKET_BOUNDS.iter().position(|&b| v <= b) {
+            self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        }
+        // values above the last bound only land in the implicit +Inf bucket
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket (non-cumulative) counts, in `BUCKET_BOUNDS` order.
+    pub fn bucket_counts(&self) -> [u64; BUCKET_BOUNDS.len()] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+/// One instrument slot within a family.
+#[derive(Debug, Clone)]
+enum Slot {
+    C(Arc<Counter>),
+    G(Arc<Gauge>),
+    H(Arc<Histogram>),
+}
+
+#[derive(Debug)]
+struct Family {
+    help: String,
+    kind: &'static str,
+    /// Keyed by the sorted label set.
+    series: HashMap<Vec<(String, String)>, Slot>,
+}
+
+/// Registry of metric families. Instrument lookups take the write lock only
+/// on first registration; steady state is a read lock + `Arc` clone.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    families: RwLock<BTreeMap<String, Family>>,
+}
+
+fn label_key(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    let mut key: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    key.sort();
+    key
+}
+
+/// Escape a label value per the Prometheus text format.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a HELP string per the Prometheus text format.
+fn escape_help(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_labels(key: &[(String, String)]) -> String {
+    if key.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> =
+        key.iter().map(|(k, v)| format!("{k}=\"{}\"", escape_label(v))).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn slot(
+        &self,
+        name: &str,
+        help: &str,
+        kind: &'static str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Slot,
+    ) -> Slot {
+        let key = label_key(labels);
+        {
+            let fams = self.families.read().unwrap();
+            if let Some(fam) = fams.get(name) {
+                if let Some(slot) = fam.series.get(&key) {
+                    return slot.clone();
+                }
+            }
+        }
+        let mut fams = self.families.write().unwrap();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help: help.to_string(),
+            kind,
+            series: HashMap::new(),
+        });
+        assert_eq!(
+            fam.kind, kind,
+            "metric {name} registered as {} and {kind}",
+            fam.kind
+        );
+        fam.series.entry(key).or_insert_with(make).clone()
+    }
+
+    /// Get or register a counter series.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.slot(name, help, "counter", labels, || Slot::C(Arc::default())) {
+            Slot::C(c) => c,
+            _ => unreachable!("kind mismatch is caught in slot()"),
+        }
+    }
+
+    /// Get or register a gauge series.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.slot(name, help, "gauge", labels, || Slot::G(Arc::default())) {
+            Slot::G(g) => g,
+            _ => unreachable!("kind mismatch is caught in slot()"),
+        }
+    }
+
+    /// Get or register a histogram series.
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Histogram> {
+        match self.slot(name, help, "histogram", labels, || Slot::H(Arc::default())) {
+            Slot::H(h) => h,
+            _ => unreachable!("kind mismatch is caught in slot()"),
+        }
+    }
+
+    /// Number of registered families.
+    pub fn len(&self) -> usize {
+        self.families.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render the whole registry in the Prometheus text exposition format.
+    /// Families appear in name order; series within a family in label order.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let fams = self.families.read().unwrap();
+        for (name, fam) in fams.iter() {
+            let _ = writeln!(out, "# HELP {name} {}", escape_help(&fam.help));
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind);
+            let mut series: Vec<(&Vec<(String, String)>, &Slot)> = fam.series.iter().collect();
+            series.sort_by(|a, b| a.0.cmp(b.0));
+            for (key, slot) in series {
+                match slot {
+                    Slot::C(c) => {
+                        let _ = writeln!(out, "{name}{} {}", render_labels(key), c.get());
+                    }
+                    Slot::G(g) => {
+                        let _ = writeln!(out, "{name}{} {}", render_labels(key), g.get());
+                    }
+                    Slot::H(h) => {
+                        let counts = h.bucket_counts();
+                        let mut cum = 0u64;
+                        for (i, &bound) in BUCKET_BOUNDS.iter().enumerate() {
+                            cum += counts[i];
+                            let mut with_le: Vec<(String, String)> = key.clone();
+                            with_le.push(("le".into(), bound.to_string()));
+                            with_le.sort();
+                            let _ = writeln!(
+                                out,
+                                "{name}_bucket{} {cum}",
+                                render_labels(&with_le)
+                            );
+                        }
+                        let mut with_le: Vec<(String, String)> = key.clone();
+                        with_le.push(("le".into(), "+Inf".into()));
+                        with_le.sort();
+                        let _ = writeln!(
+                            out,
+                            "{name}_bucket{} {}",
+                            render_labels(&with_le),
+                            h.count()
+                        );
+                        let _ =
+                            writeln!(out, "{name}_sum{} {}", render_labels(key), h.sum());
+                        let _ =
+                            writeln!(out, "{name}_count{} {}", render_labels(key), h.count());
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("c_total", "a counter", &[]);
+        c.inc();
+        c.add(2);
+        assert_eq!(c.get(), 3);
+        let g = r.gauge("g", "a gauge", &[]);
+        g.set(7);
+        g.sub(2);
+        g.add(1);
+        assert_eq!(g.get(), 6);
+    }
+
+    #[test]
+    fn same_name_and_labels_share_the_instrument() {
+        let r = MetricsRegistry::new();
+        r.counter("c_total", "help", &[("op", "x")]).inc();
+        r.counter("c_total", "help", &[("op", "x")]).inc();
+        assert_eq!(r.counter("c_total", "help", &[("op", "x")]).get(), 2);
+        // label order does not matter
+        let a = r.counter("m_total", "help", &[("a", "1"), ("b", "2")]);
+        r.counter("m_total", "help", &[("b", "2"), ("a", "1")]).inc();
+        assert_eq!(a.get(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_mismatch_panics() {
+        let r = MetricsRegistry::new();
+        r.counter("x", "help", &[]);
+        r.gauge("x", "help", &[]);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_render() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram("lat_ns", "latency", &[]);
+        h.observe(10); // <= 16
+        h.observe(100); // <= 256
+        h.observe(100_000_000_000); // above last bound: only +Inf
+        let text = r.render();
+        assert!(text.contains("lat_ns_bucket{le=\"16\"} 1"), "{text}");
+        assert!(text.contains("lat_ns_bucket{le=\"256\"} 2"), "{text}");
+        assert!(text.contains("lat_ns_bucket{le=\"17179869184\"} 2"), "{text}");
+        assert!(text.contains("lat_ns_bucket{le=\"+Inf\"} 3"), "{text}");
+        assert!(text.contains("lat_ns_count 3"), "{text}");
+        assert!(text.contains(&format!("lat_ns_sum {}", 10 + 100 + 100_000_000_000u64)));
+    }
+
+    #[test]
+    fn render_is_deterministic_and_sorted() {
+        let r = MetricsRegistry::new();
+        r.counter("b_total", "bbb", &[("op", "y")]).inc();
+        r.counter("b_total", "bbb", &[("op", "x")]).inc();
+        r.gauge("a", "aaa", &[]).set(1);
+        let text = r.render();
+        assert_eq!(text, r.render());
+        let a = text.find("# HELP a aaa").unwrap();
+        let b = text.find("# HELP b_total bbb").unwrap();
+        assert!(a < b, "families sorted by name");
+        let x = text.find("b_total{op=\"x\"}").unwrap();
+        let y = text.find("b_total{op=\"y\"}").unwrap();
+        assert!(x < y, "series sorted by labels");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let r = MetricsRegistry::new();
+        r.counter("esc_total", "escaping", &[("k", "a\\b\"c\nd")]).inc();
+        let text = r.render();
+        assert!(text.contains("esc_total{k=\"a\\\\b\\\"c\\nd\"} 1"), "{text}");
+    }
+}

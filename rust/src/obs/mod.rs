@@ -1,0 +1,201 @@
+//! Observability: flight-recorder tracing + metrics exposition.
+//!
+//! Two process-wide singletons tie the stack together:
+//!
+//! * [`metrics()`] — a [`MetricsRegistry`] of counters/gauges/histograms.
+//!   Instrumented structs resolve `Arc` handles once at construction, so
+//!   hot paths pay a single relaxed atomic op. [`MetricsRegistry::render`]
+//!   emits Prometheus text exposition, served over the coordinator wire
+//!   (`Request::Metrics`) and by `emucxl stats`.
+//! * [`recorder()`] — a [`FlightRecorder`] ring of [`TraceEvent`]s, dumped
+//!   as JSONL on demand (`Request::TraceDump`), on coordinator shutdown,
+//!   and on panic ([`install_panic_hook`]).
+//!
+//! Correlation uses a thread-local `(span, tenant)` context: the
+//! coordinator opens a fresh span per wire request ([`span`]); library
+//! entry points (API calls, middleware ops) open one only when none is
+//! active ([`enter_op`]), so nested device/mem events inherit the request's
+//! span and tenant. Timestamps come from the emulated appliance's virtual
+//! clock (`timing::clock`) — they order events on the modeled timeline,
+//! not wall time.
+
+pub mod metrics;
+pub mod recorder;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Once, OnceLock};
+
+pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry, BUCKET_BOUNDS};
+pub use recorder::{FlightRecorder, Subsystem, TraceEvent};
+
+/// Events the flight recorder retains.
+pub const RECORDER_CAPACITY: usize = 8192;
+
+static METRICS: OnceLock<MetricsRegistry> = OnceLock::new();
+static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+
+/// The process-wide metrics registry.
+pub fn metrics() -> &'static MetricsRegistry {
+    METRICS.get_or_init(MetricsRegistry::new)
+}
+
+/// The process-wide flight recorder.
+pub fn recorder() -> &'static FlightRecorder {
+    RECORDER.get_or_init(|| FlightRecorder::new(RECORDER_CAPACITY))
+}
+
+fn next_span_id() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+thread_local! {
+    /// Active (span, tenant) for this thread; (0, 0) = none.
+    static CTX: Cell<(u64, u32)> = const { Cell::new((0, 0)) };
+}
+
+/// The active (span, tenant) context, (0, 0) when none.
+pub fn current() -> (u64, u32) {
+    CTX.with(|c| c.get())
+}
+
+/// Restores the previous span context on drop.
+#[must_use = "the span ends when the guard is dropped"]
+pub struct SpanGuard {
+    prev: (u64, u32),
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        CTX.with(|c| c.set(self.prev));
+    }
+}
+
+/// Open a fresh span attributed to `tenant`. Used at true operation roots
+/// (one coordinator wire request = one span).
+pub fn span(tenant: u32) -> SpanGuard {
+    let prev = current();
+    CTX.with(|c| c.set((next_span_id(), tenant)));
+    SpanGuard { prev }
+}
+
+/// Open a span only if none is active, inheriting the current tenant.
+/// Library entry points (API calls, middleware ops) use this so directly
+/// invoked operations get their own span while nested calls — a KV `put`
+/// issuing API writes issuing device accesses — share one.
+pub fn enter_op() -> SpanGuard {
+    let (span_id, tenant) = current();
+    let prev = (span_id, tenant);
+    if span_id == 0 {
+        CTX.with(|c| c.set((next_span_id(), tenant)));
+    }
+    SpanGuard { prev }
+}
+
+/// Record one event into the flight recorder, stamped with the active
+/// span/tenant (a fresh span id is minted for unattributed events).
+pub fn record(
+    subsystem: Subsystem,
+    op: &'static str,
+    ts_ns: u64,
+    arg: u64,
+    bytes: u64,
+    lat_ns: f32,
+    ok: bool,
+) {
+    let (mut span_id, tenant) = current();
+    if span_id == 0 {
+        span_id = next_span_id();
+    }
+    recorder().record(TraceEvent {
+        seq: 0,
+        ts_ns,
+        span: span_id,
+        tenant,
+        subsystem,
+        op,
+        arg,
+        bytes,
+        lat_ns,
+        ok,
+    });
+}
+
+/// Install a panic hook that dumps the tail of the flight recorder to
+/// stderr before delegating to the previous hook. Idempotent.
+pub fn install_panic_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let dump = recorder().dump_jsonl(256);
+            if !dump.is_empty() {
+                eprintln!("--- emucxl flight recorder (most recent events) ---");
+                eprint!("{dump}");
+                eprintln!("---------------------------------------------------");
+            }
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_guard_nests_and_restores() {
+        // run on a dedicated thread: CTX is thread-local, so parallel tests
+        // in this process cannot interfere.
+        std::thread::spawn(|| {
+            assert_eq!(current(), (0, 0));
+            let outer = span(9);
+            let (outer_span, tenant) = current();
+            assert!(outer_span != 0);
+            assert_eq!(tenant, 9);
+            {
+                let _inner = enter_op();
+                assert_eq!(current(), (outer_span, 9), "enter_op inherits");
+            }
+            assert_eq!(current(), (outer_span, 9));
+            drop(outer);
+            assert_eq!(current(), (0, 0));
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn enter_op_mints_span_at_the_root() {
+        std::thread::spawn(|| {
+            let g = enter_op();
+            let (s, t) = current();
+            assert!(s != 0, "root enter_op starts a span");
+            assert_eq!(t, 0, "no tenant outside the coordinator");
+            drop(g);
+            assert_eq!(current(), (0, 0));
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn record_stamps_active_span() {
+        std::thread::spawn(|| {
+            let _g = span(5);
+            let (want_span, _) = current();
+            record(Subsystem::Api, "span-stamp-test", 1, 2, 3, 4.0, true);
+            let ev = recorder()
+                .snapshot(usize::MAX)
+                .into_iter()
+                .rev()
+                .find(|e| e.op == "span-stamp-test")
+                .expect("event recorded");
+            assert_eq!(ev.span, want_span);
+            assert_eq!(ev.tenant, 5);
+        })
+        .join()
+        .unwrap();
+    }
+}

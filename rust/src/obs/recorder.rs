@@ -1,0 +1,283 @@
+//! Flight recorder: a fixed-capacity ring of structured trace events.
+//!
+//! Every instrumented subsystem appends [`TraceEvent`]s; the ring keeps the
+//! most recent `capacity` of them and counts what it had to drop. Events
+//! carry the span/tenant propagated by [`crate::obs`]'s thread-local
+//! context and virtual-clock timestamps (`timing::clock` nanoseconds), so
+//! a dump correlates a coordinator request with the device accesses it
+//! caused. Dumps are JSONL — one self-contained object per line — emitted
+//! on demand (`TraceDump` wire request), on coordinator shutdown, and from
+//! the panic hook.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Which layer of the stack emitted an event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Subsystem {
+    /// Character-device emulation (`device::chardev`).
+    Device,
+    /// Memory management (arena / vaspace).
+    Mem,
+    /// `EmucxlContext` API surface.
+    Api,
+    /// KV-store middleware.
+    Kv,
+    /// Slab-allocator middleware.
+    Slab,
+    /// Queue middleware.
+    Queue,
+    /// Pool coordinator (wire requests).
+    Coordinator,
+    /// Dynamic timing batcher.
+    Batcher,
+}
+
+impl Subsystem {
+    pub const ALL: [Subsystem; 8] = [
+        Subsystem::Device,
+        Subsystem::Mem,
+        Subsystem::Api,
+        Subsystem::Kv,
+        Subsystem::Slab,
+        Subsystem::Queue,
+        Subsystem::Coordinator,
+        Subsystem::Batcher,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Subsystem::Device => "device",
+            Subsystem::Mem => "mem",
+            Subsystem::Api => "api",
+            Subsystem::Kv => "kv",
+            Subsystem::Slab => "slab",
+            Subsystem::Queue => "queue",
+            Subsystem::Coordinator => "coordinator",
+            Subsystem::Batcher => "batcher",
+        }
+    }
+}
+
+/// One recorded event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Monotonic sequence number (1-based, never reused).
+    pub seq: u64,
+    /// Virtual-clock timestamp in ns (0 when no clock was reachable).
+    pub ts_ns: u64,
+    /// Span id correlating nested events of one logical operation.
+    pub span: u64,
+    /// Tenant id (0 = unattributed / local use).
+    pub tenant: u32,
+    pub subsystem: Subsystem,
+    pub op: &'static str,
+    /// Op-specific argument (address, key length, batch size, ...).
+    pub arg: u64,
+    /// Payload bytes touched, when meaningful.
+    pub bytes: u64,
+    /// Modeled latency in ns, when the op was priced.
+    pub lat_ns: f32,
+    pub ok: bool,
+}
+
+impl TraceEvent {
+    /// One JSON object, no trailing newline. Hand-rolled (std-only crate);
+    /// all keys and `op`/`subsystem` values are static identifiers, so no
+    /// string escaping is needed.
+    pub fn to_json(&self) -> String {
+        let lat = if self.lat_ns.is_finite() { self.lat_ns } else { 0.0 };
+        format!(
+            "{{\"seq\":{},\"ts_ns\":{},\"span\":{},\"tenant\":{},\"subsystem\":\"{}\",\
+             \"op\":\"{}\",\"arg\":{},\"bytes\":{},\"lat_ns\":{},\"ok\":{}}}",
+            self.seq,
+            self.ts_ns,
+            self.span,
+            self.tenant,
+            self.subsystem.name(),
+            self.op,
+            self.arg,
+            self.bytes,
+            lat,
+            self.ok
+        )
+    }
+}
+
+/// Fixed-capacity ring buffer of [`TraceEvent`]s.
+///
+/// "Lock-light": one uncontended mutex around a `VecDeque` — record() is a
+/// push_front-free O(1) append and the lock is held for no allocation in
+/// the steady state (the deque is pre-allocated to capacity).
+#[derive(Debug)]
+pub struct FlightRecorder {
+    ring: Mutex<VecDeque<TraceEvent>>,
+    capacity: usize,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "flight recorder capacity must be positive");
+        Self {
+            ring: Mutex::new(VecDeque::with_capacity(capacity)),
+            capacity,
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Append an event, assigning its sequence number. Evicts the oldest
+    /// event when full.
+    pub fn record(&self, mut ev: TraceEvent) -> u64 {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        ev.seq = seq;
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+        seq
+    }
+
+    /// Events currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever recorded.
+    pub fn total(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Events evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The most recent `max` events, oldest first.
+    pub fn snapshot(&self, max: usize) -> Vec<TraceEvent> {
+        let ring = self.ring.lock().unwrap();
+        let skip = ring.len().saturating_sub(max);
+        ring.iter().skip(skip).cloned().collect()
+    }
+
+    /// JSONL dump of the most recent `max` events, oldest first. Each line
+    /// is one event object; the result ends with a newline unless empty.
+    pub fn dump_jsonl(&self, max: usize) -> String {
+        let events = self.snapshot(max);
+        let mut out = String::with_capacity(events.len() * 128);
+        for ev in &events {
+            let _ = writeln!(out, "{}", ev.to_json());
+        }
+        out
+    }
+
+    /// Drop all held events (sequence numbers keep advancing).
+    pub fn clear(&self) {
+        self.ring.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(subsystem: Subsystem, op: &'static str) -> TraceEvent {
+        TraceEvent {
+            seq: 0,
+            ts_ns: 42,
+            span: 7,
+            tenant: 3,
+            subsystem,
+            op,
+            arg: 1,
+            bytes: 64,
+            lat_ns: 254.0,
+            ok: true,
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let r = FlightRecorder::new(3);
+        for _ in 0..5 {
+            r.record(ev(Subsystem::Device, "mmap"));
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.total(), 5);
+        assert_eq!(r.dropped(), 2);
+        let snap = r.snapshot(usize::MAX);
+        assert_eq!(snap.len(), 3);
+        assert_eq!(snap[0].seq, 3, "oldest surviving event");
+        assert_eq!(snap[2].seq, 5, "newest event last");
+    }
+
+    #[test]
+    fn snapshot_caps_at_max_most_recent() {
+        let r = FlightRecorder::new(10);
+        for _ in 0..6 {
+            r.record(ev(Subsystem::Api, "read"));
+        }
+        let snap = r.snapshot(2);
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].seq, 5);
+        assert_eq!(snap[1].seq, 6);
+    }
+
+    #[test]
+    fn jsonl_lines_are_valid_objects() {
+        let r = FlightRecorder::new(4);
+        r.record(ev(Subsystem::Kv, "put"));
+        r.record(ev(Subsystem::Coordinator, "alloc"));
+        let dump = r.dump_jsonl(usize::MAX);
+        let lines: Vec<&str> = dump.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+            assert!(line.contains("\"seq\":"), "{line}");
+            assert!(line.contains("\"subsystem\":\""), "{line}");
+            assert!(line.contains("\"ok\":true"), "{line}");
+        }
+        assert!(dump.contains("\"subsystem\":\"kv\""));
+        assert!(dump.contains("\"subsystem\":\"coordinator\""));
+    }
+
+    #[test]
+    fn non_finite_latency_serializes_as_zero() {
+        let mut e = ev(Subsystem::Api, "write");
+        e.lat_ns = f32::NAN;
+        assert!(e.to_json().contains("\"lat_ns\":0"));
+    }
+
+    #[test]
+    fn subsystem_names_are_stable() {
+        let names: Vec<&str> = Subsystem::ALL.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            ["device", "mem", "api", "kv", "slab", "queue", "coordinator", "batcher"]
+        );
+    }
+
+    #[test]
+    fn clear_keeps_sequence_monotonic() {
+        let r = FlightRecorder::new(4);
+        r.record(ev(Subsystem::Queue, "enqueue"));
+        r.clear();
+        assert!(r.is_empty());
+        let seq = r.record(ev(Subsystem::Queue, "dequeue"));
+        assert_eq!(seq, 2);
+    }
+}

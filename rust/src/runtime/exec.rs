@@ -5,6 +5,8 @@
 //! `xla::Literal`s and unwraps the `return_tuple=True` output tuples.
 
 use crate::error::{EmucxlError, Result};
+// See `runtime/mod.rs`: the shim stands in for the real `xla` crate.
+use crate::runtime::xla_shim as xla;
 use crate::timing::desc::AccessDesc;
 use crate::timing::model::{TimingParams, NUM_PARAMS};
 

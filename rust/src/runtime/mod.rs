@@ -10,11 +10,17 @@
 
 pub mod exec;
 pub mod manifest;
+pub(crate) mod xla_shim;
 
 pub use exec::{CalibExec, LatencyBatchExec, WindowExec};
 pub use manifest::Manifest;
 
 use std::path::Path;
+
+// Offline builds have no vendored `xla` crate; `xla_shim` mirrors its API
+// and reports the backend as unavailable (callers fall back to the native
+// timing path). Point this alias at the real crate to re-enable PJRT.
+use crate::runtime::xla_shim as xla;
 
 use crate::error::{EmucxlError, Result};
 

@@ -54,8 +54,11 @@ impl Telemetry {
         Self::default()
     }
 
+    /// Direct discriminant index — `ALL` is in declaration order, so the
+    /// discriminant IS the array index (asserted by `idx_is_discriminant`).
+    #[inline]
     fn idx(class: AccessClass) -> usize {
-        AccessClass::ALL.iter().position(|&c| c == class).unwrap()
+        class as usize
     }
 
     pub fn record(&mut self, desc: &AccessDesc, latency_ns: f32) {
@@ -120,6 +123,15 @@ impl Telemetry {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn idx_is_discriminant() {
+        // Telemetry::idx relies on ALL being in declaration order.
+        for (i, &c) in AccessClass::ALL.iter().enumerate() {
+            assert_eq!(c as usize, i, "{}", c.name());
+            assert_eq!(Telemetry::idx(c), i);
+        }
+    }
 
     #[test]
     fn classification() {

@@ -15,6 +15,7 @@ fn server() -> PoolServer {
         kv_policy: GetPolicy::Promote,
         batch: 16,
         max_wait: Duration::from_micros(100),
+        trace_dump: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }

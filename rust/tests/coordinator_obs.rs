@@ -1,0 +1,201 @@
+//! Coordinator observability round-trip: a mixed workload over the wire,
+//! then `Metrics` / `TraceDump` requests against the same server.
+//!
+//! The registry and recorder are process-wide, so assertions here check
+//! presence of series/events, not exact values.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use emucxl::config::EmucxlConfig;
+use emucxl::coordinator::client::PoolClient;
+use emucxl::coordinator::proto::{read_frame, write_frame, Request, Response};
+use emucxl::coordinator::server::{PoolConfig, PoolServer};
+use emucxl::middleware::kv::GetPolicy;
+use emucxl::{NODE_LOCAL, NODE_REMOTE};
+
+fn server() -> PoolServer {
+    let cfg = PoolConfig {
+        emucxl: EmucxlConfig::sized(8 << 20, 32 << 20),
+        kv_local_capacity: 4,
+        kv_policy: GetPolicy::Promote,
+        batch: 4,
+        max_wait: Duration::from_micros(100),
+        trace_dump: None,
+    };
+    PoolServer::start(cfg, 0).expect("start server")
+}
+
+/// Drive every request type once so each instrumented layer emits.
+fn mixed_workload(client: &mut PoolClient) {
+    let (addr, _) = client.alloc(4096, NODE_LOCAL).unwrap();
+    client.write(addr, &[42u8; 512]).unwrap();
+    let (data, _) = client.read(addr, 512).unwrap();
+    assert_eq!(data[0], 42);
+    let (addr, _) = client.migrate(addr, NODE_REMOTE).unwrap();
+    assert!(!client.is_local(addr).unwrap());
+    client.free(addr).unwrap();
+    client.kv_put(b"obs-key", b"obs-value").unwrap();
+    assert!(client.kv_get(b"obs-key").unwrap().0.is_some());
+    assert!(client.kv_get(b"obs-never-put").unwrap().0.is_none());
+    assert!(client.kv_delete(b"obs-key").unwrap());
+    let _ = client.stats(NODE_LOCAL).unwrap();
+}
+
+#[test]
+fn metrics_cover_all_layers_after_mixed_workload() {
+    let srv = server();
+    let mut client = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let tenant = client.tenant_id();
+    mixed_workload(&mut client);
+
+    let text = client.metrics().unwrap();
+    // device + mem
+    for family in [
+        "emucxl_device_mmap_total",
+        "emucxl_device_mem_ops_total",
+        "emucxl_mem_arena_used_bytes",
+    ] {
+        assert!(text.contains(&format!("# TYPE {family} ")), "missing {family}");
+    }
+    // api
+    assert!(text.contains("emucxl_api_ops_total{op=\"alloc\",outcome=\"ok\"}"));
+    assert!(text.contains("# TYPE emucxl_api_latency_ns histogram"));
+    // kv
+    assert!(text.contains("emucxl_kv_gets_total{result=\"miss\"}"));
+    // coordinator + per-tenant series
+    assert!(text.contains("emucxl_coordinator_requests_total{op=\"alloc\",outcome=\"ok\"}"));
+    assert!(text.contains("# TYPE emucxl_coordinator_request_wall_ns histogram"));
+    assert!(
+        text.contains(&format!("emucxl_tenant_ops_total{{op=\"kv_put\",tenant=\"{tenant}\"}}")),
+        "missing per-tenant series for tenant {tenant} in:\n{text}"
+    );
+    assert!(text.contains(&format!("emucxl_tenant_quota_bytes{{tenant=\"{tenant}\"}}")));
+    // pool gauges refreshed by the Metrics request itself
+    assert!(text.contains("emucxl_coordinator_tenants "));
+    assert!(text.contains("emucxl_pool_virtual_time_ns "));
+    // batcher (priced at least one descriptor by now)
+    assert!(text.contains("emucxl_batcher_flushes_total "));
+
+    client.bye().unwrap();
+}
+
+#[test]
+fn trace_dump_has_events_from_each_wire_layer() {
+    let srv = server();
+    let mut client = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    mixed_workload(&mut client);
+
+    let dump = client.trace_dump(0).unwrap();
+    assert!(!dump.is_empty());
+    for subsystem in ["coordinator", "api", "device", "mem", "kv", "batcher"] {
+        assert!(
+            dump.contains(&format!("\"subsystem\":\"{subsystem}\"")),
+            "no {subsystem} events in dump"
+        );
+    }
+    for line in dump.lines() {
+        assert!(line.starts_with('{') && line.ends_with('}'), "bad JSONL line: {line}");
+    }
+
+    let capped = client.trace_dump(5).unwrap();
+    assert!(capped.lines().count() <= 5, "trace max must be respected");
+    client.bye().unwrap();
+}
+
+#[test]
+fn coordinator_requests_share_one_span_with_nested_events() {
+    let srv = server();
+    let mut client = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let tenant = client.tenant_id();
+    client.kv_put(b"span-key-xyz", b"v").unwrap();
+
+    let dump = client.trace_dump(0).unwrap();
+    // find the kv_put coordinator event for this tenant, newest first
+    let put_line = dump
+        .lines()
+        .rev()
+        .find(|l| {
+            l.contains("\"subsystem\":\"coordinator\"")
+                && l.contains("\"op\":\"kv_put\"")
+                && l.contains(&format!("\"tenant\":{tenant},"))
+        })
+        .expect("coordinator kv_put event");
+    let span = put_line
+        .split("\"span\":")
+        .nth(1)
+        .and_then(|s| s.split(',').next())
+        .unwrap()
+        .to_string();
+    let shared: Vec<&str> = dump
+        .lines()
+        .filter(|l| l.contains(&format!("\"span\":{span},")) && !l.contains("coordinator"))
+        .collect();
+    assert!(
+        !shared.is_empty(),
+        "nested kv/api/device events must share the request span {span}"
+    );
+    client.bye().unwrap();
+}
+
+#[test]
+fn metrics_and_trace_allowed_before_hello() {
+    let srv = server();
+    let stream = TcpStream::connect(srv.addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+
+    write_frame(&mut writer, &Request::Metrics.encode()).unwrap();
+    let frame = read_frame(&mut reader).unwrap().unwrap();
+    match Response::decode(&frame).unwrap() {
+        Response::Text { body } => {
+            assert!(body.contains("# TYPE"), "metrics text expected, got:\n{body}")
+        }
+        other => panic!("expected Text, got {other:?}"),
+    }
+
+    write_frame(&mut writer, &Request::TraceDump { max: 3 }.encode()).unwrap();
+    let frame = read_frame(&mut reader).unwrap().unwrap();
+    match Response::decode(&frame).unwrap() {
+        Response::Text { body } => assert!(body.lines().count() <= 3),
+        other => panic!("expected Text, got {other:?}"),
+    }
+
+    // ...but a pool operation without Hello is still rejected
+    write_frame(&mut writer, &Request::Alloc { size: 64, node: 0 }.encode()).unwrap();
+    let frame = read_frame(&mut reader).unwrap().unwrap();
+    match Response::decode(&frame).unwrap() {
+        Response::Error { msg } => assert!(msg.contains("Hello"), "{msg}"),
+        other => panic!("expected Error, got {other:?}"),
+    }
+}
+
+#[test]
+fn shutdown_writes_trace_dump_file() {
+    let path = std::env::temp_dir().join(format!(
+        "emucxl-trace-{}-{:?}.jsonl",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let cfg = PoolConfig {
+        emucxl: EmucxlConfig::sized(8 << 20, 32 << 20),
+        kv_local_capacity: 4,
+        kv_policy: GetPolicy::Promote,
+        batch: 4,
+        max_wait: Duration::from_micros(100),
+        trace_dump: Some(path.clone()),
+    };
+    let mut srv = PoolServer::start(cfg, 0).expect("start server");
+    let mut client = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let (addr, _) = client.alloc(4096, NODE_LOCAL).unwrap();
+    client.free(addr).unwrap();
+    client.bye().unwrap();
+    srv.shutdown();
+
+    let dump = std::fs::read_to_string(&path).expect("trace dump written on shutdown");
+    assert!(dump.contains("\"op\":\"shutdown\""), "shutdown event present");
+    assert!(dump.contains("\"subsystem\":\"coordinator\""));
+    let _ = std::fs::remove_file(&path);
+}

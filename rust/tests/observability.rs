@@ -1,0 +1,243 @@
+//! Observability integration tests: Prometheus exposition well-formedness
+//! and stability on a fresh registry, flight-recorder semantics, and a
+//! smoke test that the instrumented stack actually emits.
+//!
+//! The process-wide registry/recorder are shared across parallel tests, so
+//! global assertions use presence and deltas — never exact global values.
+//! Exact-output ("golden") assertions run against private registries.
+
+use emucxl::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
+use emucxl::config::EmucxlConfig;
+use emucxl::middleware::kv::{GetPolicy, KvStore};
+use emucxl::middleware::queue::{EmucxlQueue, QueuePolicy};
+use emucxl::middleware::slab::SlabAllocator;
+use emucxl::obs::{self, FlightRecorder, MetricsRegistry, Subsystem, TraceEvent, BUCKET_BOUNDS};
+
+fn ctx() -> EmucxlContext {
+    EmucxlContext::init(EmucxlConfig::sized(4 << 20, 16 << 20)).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// exposition format (fresh registries: exact assertions are safe)
+
+#[test]
+fn exposition_golden_counter_and_gauge() {
+    let r = MetricsRegistry::new();
+    r.counter("t_ops_total", "ops by kind", &[("kind", "a")]).add(3);
+    r.counter("t_ops_total", "ops by kind", &[("kind", "b")]).inc();
+    r.gauge("t_depth", "current depth", &[]).set(-4);
+    assert_eq!(
+        r.render(),
+        "# HELP t_depth current depth\n\
+         # TYPE t_depth gauge\n\
+         t_depth -4\n\
+         # HELP t_ops_total ops by kind\n\
+         # TYPE t_ops_total counter\n\
+         t_ops_total{kind=\"a\"} 3\n\
+         t_ops_total{kind=\"b\"} 1\n"
+    );
+}
+
+#[test]
+fn exposition_is_stable_across_renders_and_label_order() {
+    let r = MetricsRegistry::new();
+    r.counter("s_total", "h", &[("b", "2"), ("a", "1")]).inc();
+    r.counter("s_total", "h", &[("a", "1"), ("b", "2")]).inc();
+    let first = r.render();
+    assert_eq!(first, r.render(), "render must be deterministic");
+    // both registrations hit the same series (labels sorted into one key)
+    assert!(first.contains("s_total{a=\"1\",b=\"2\"} 2"), "{first}");
+}
+
+#[test]
+fn exposition_escapes_label_values_and_help() {
+    let r = MetricsRegistry::new();
+    r.counter("e_total", "help with \\ backslash\nand newline", &[("k", "v\"w\\x\ny")])
+        .inc();
+    let text = r.render();
+    assert!(
+        text.contains("# HELP e_total help with \\\\ backslash\\nand newline"),
+        "{text}"
+    );
+    assert!(text.contains("e_total{k=\"v\\\"w\\\\x\\ny\"} 1"), "{text}");
+    // every rendered line is a comment or `name{...} value`
+    for line in text.lines() {
+        assert!(
+            line.starts_with('#')
+                || line.rsplit_once(' ').map(|(_, v)| v.parse::<f64>().is_ok()) == Some(true),
+            "unparseable line: {line}"
+        );
+    }
+}
+
+#[test]
+fn histogram_exposition_has_cumulative_buckets_and_inf() {
+    let r = MetricsRegistry::new();
+    let h = r.histogram("lat_ns", "latency", &[("op", "x")]);
+    h.observe(1); // first bucket
+    h.observe(100); // <= 256
+    h.observe(u64::MAX); // +Inf only
+    let text = r.render();
+    assert!(text.contains("lat_ns_bucket{le=\"16\",op=\"x\"} 1"), "{text}");
+    assert!(text.contains("lat_ns_bucket{le=\"256\",op=\"x\"} 2"), "{text}");
+    assert!(text.contains("lat_ns_bucket{le=\"+Inf\",op=\"x\"} 3"), "{text}");
+    assert!(text.contains("lat_ns_count{op=\"x\"} 3"), "{text}");
+    // cumulative counts never decrease across the declared bounds
+    let mut last = 0u64;
+    for b in BUCKET_BOUNDS {
+        let needle = format!("lat_ns_bucket{{le=\"{b}\",op=\"x\"}} ");
+        let line = text
+            .lines()
+            .find(|l| l.starts_with(&needle))
+            .unwrap_or_else(|| panic!("missing bucket {b}"));
+        let v: u64 = line.rsplit_once(' ').unwrap().1.parse().unwrap();
+        assert!(v >= last, "cumulative bucket shrank at le={b}");
+        last = v;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flight recorder
+
+#[test]
+fn recorder_ring_bounds_and_dump() {
+    let r = FlightRecorder::new(8);
+    for i in 0..20 {
+        r.record(TraceEvent {
+            seq: 0,
+            ts_ns: i,
+            span: 1,
+            tenant: 0,
+            subsystem: Subsystem::Api,
+            op: "read",
+            arg: i,
+            bytes: 64,
+            lat_ns: 1.0,
+            ok: true,
+        });
+    }
+    assert_eq!(r.len(), 8);
+    assert_eq!(r.total(), 20);
+    assert_eq!(r.dropped(), 12);
+    let dump = r.dump_jsonl(3);
+    assert_eq!(dump.lines().count(), 3, "max respected");
+    let last = dump.lines().last().unwrap();
+    assert!(last.contains("\"seq\":20"), "newest event last: {last}");
+}
+
+// ---------------------------------------------------------------------------
+// instrumented stack (global registry/recorder: deltas + presence only)
+
+#[test]
+fn api_and_device_layers_emit_metrics_and_events() {
+    let m = obs::metrics();
+    let alloc_ok =
+        m.counter("emucxl_api_ops_total", "", &[("op", "alloc"), ("outcome", "ok")]);
+    let before = alloc_ok.get();
+    let events_before = obs::recorder().total();
+
+    let mut c = ctx();
+    let a = c.alloc(4096, NODE_LOCAL).unwrap();
+    c.write(a, &[1u8; 128]).unwrap();
+    let mut buf = [0u8; 128];
+    c.read(a, &mut buf).unwrap();
+    let a = c.migrate(a, NODE_REMOTE).unwrap();
+    c.free(a).unwrap();
+
+    assert!(alloc_ok.get() > before, "api alloc counter must move");
+    assert!(obs::recorder().total() > events_before, "events must be recorded");
+
+    let text = m.render();
+    for family in [
+        "emucxl_api_ops_total",
+        "emucxl_api_latency_ns",
+        "emucxl_device_mmap_total",
+        "emucxl_device_mem_ops_total",
+        "emucxl_mem_arena_used_bytes",
+        "emucxl_mem_vaspace_ops_total",
+    ] {
+        assert!(text.contains(&format!("# TYPE {family} ")), "missing {family}");
+    }
+
+    let dump = obs::recorder().dump_jsonl(usize::MAX);
+    for subsystem in ["api", "device", "mem"] {
+        assert!(
+            dump.contains(&format!("\"subsystem\":\"{subsystem}\"")),
+            "no {subsystem} events in dump"
+        );
+    }
+}
+
+#[test]
+fn failed_api_ops_count_as_errors() {
+    let m = obs::metrics();
+    let free_err =
+        m.counter("emucxl_api_ops_total", "", &[("op", "free"), ("outcome", "error")]);
+    let before = free_err.get();
+    let mut c = ctx();
+    assert!(c.free(emucxl::mem::vaspace::VAddr(0xdead_0000)).is_err());
+    assert!(free_err.get() > before, "error outcome must be counted");
+}
+
+#[test]
+fn middleware_layers_emit_their_series() {
+    let mut c = ctx();
+
+    let mut kv = KvStore::new(2, GetPolicy::Promote);
+    kv.put(&mut c, b"obs-k1", b"v1").unwrap();
+    assert!(kv.get(&mut c, b"obs-k1").unwrap().is_some());
+    assert!(kv.get(&mut c, b"obs-missing").unwrap().is_none());
+    kv.delete(&mut c, b"obs-k1").unwrap();
+
+    let mut q = EmucxlQueue::new(QueuePolicy::AllRemote);
+    q.enqueue(&mut c, 11).unwrap();
+    assert_eq!(q.dequeue(&mut c).unwrap(), Some(11));
+
+    let mut slab = SlabAllocator::new();
+    let s = slab.alloc(&mut c, 96, NODE_LOCAL).unwrap();
+    slab.free(&mut c, s).unwrap();
+
+    let text = obs::metrics().render();
+    for needle in [
+        "emucxl_kv_ops_total{op=\"put\"}",
+        "emucxl_kv_gets_total{result=\"miss\"}",
+        "emucxl_queue_ops_total{op=\"enqueue\"}",
+        "emucxl_queue_depth",
+        "emucxl_slab_ops_total{op=\"alloc\"}",
+        "emucxl_slab_backend_allocs_total",
+    ] {
+        assert!(text.contains(needle), "missing series {needle} in:\n{text}");
+    }
+
+    let dump = obs::recorder().dump_jsonl(usize::MAX);
+    for subsystem in ["kv", "queue", "slab"] {
+        assert!(
+            dump.contains(&format!("\"subsystem\":\"{subsystem}\"")),
+            "no {subsystem} events in dump"
+        );
+    }
+}
+
+#[test]
+fn nested_middleware_ops_share_a_span() {
+    // A KV put issues API writes; on this thread the put's span must
+    // stamp both the kv event and the nested api/device events.
+    std::thread::spawn(|| {
+        let mut c = ctx();
+        let mut kv = KvStore::new(2, GetPolicy::Promote);
+        kv.put(&mut c, b"span-probe", b"value").unwrap();
+        let events = obs::recorder().snapshot(usize::MAX);
+        let put = events
+            .iter()
+            .rev()
+            .find(|e| e.subsystem == Subsystem::Kv && e.op == "put" && e.arg == 10)
+            .expect("kv put event (arg = key length)");
+        let nested: Vec<_> = events
+            .iter()
+            .filter(|e| e.span == put.span && e.subsystem == Subsystem::Api)
+            .collect();
+        assert!(!nested.is_empty(), "api events must share the kv put span");
+    })
+    .join()
+    .unwrap();
+}
