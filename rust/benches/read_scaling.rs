@@ -1,0 +1,109 @@
+//! Read-path scaling: the concurrent `&self` read path (RwLock, many
+//! readers in parallel) against the old single-mutex discipline that
+//! serialized every access, at 1..8 reader threads.
+//!
+//! Before the refactor `EmucxlContext::read` took `&mut self`, so a shared
+//! pool could only ever be `Mutex<EmucxlContext>` — reads flatlined no
+//! matter how many tenants connected. Now reads take `&self` and the same
+//! context can sit behind an `RwLock`, which is exactly what the pool
+//! coordinator does. This bench quantifies the difference.
+//!
+//! Run: `cargo bench --bench read_scaling`
+
+mod common;
+
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use common::section;
+use emucxl::api::{EmucxlContext, NODE_LOCAL};
+use emucxl::config::EmucxlConfig;
+use emucxl::mem::vaspace::VAddr;
+
+const ALLOCS: usize = 16;
+const ALLOC_SIZE: usize = 4096;
+const READS_PER_THREAD: usize = 4_000;
+const READ_LEN: usize = 4096;
+
+fn ctx_with_data() -> (EmucxlContext, Vec<VAddr>) {
+    let mut ctx = EmucxlContext::init(EmucxlConfig::sized(64 << 20, 256 << 20)).unwrap();
+    let payload = vec![0xABu8; ALLOC_SIZE];
+    let addrs: Vec<VAddr> = (0..ALLOCS)
+        .map(|_| {
+            let a = ctx.alloc(ALLOC_SIZE, NODE_LOCAL).unwrap();
+            ctx.write(a, &payload).unwrap();
+            a
+        })
+        .collect();
+    (ctx, addrs)
+}
+
+/// Baseline: every read takes the exclusive lock (pre-refactor behavior).
+fn run_mutex(threads: usize) -> f64 {
+    let (ctx, addrs) = ctx_with_data();
+    let ctx = Arc::new(Mutex::new(ctx));
+    let wall = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let ctx = Arc::clone(&ctx);
+            let addrs = addrs.clone();
+            std::thread::spawn(move || {
+                let mut buf = vec![0u8; READ_LEN];
+                for i in 0..READS_PER_THREAD {
+                    let a = addrs[(t + i) % addrs.len()];
+                    ctx.lock().unwrap().read(a, &mut buf).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (threads * READS_PER_THREAD) as f64 / wall.elapsed().as_secs_f64()
+}
+
+/// The refactored path: readers share the lock, memcpys run in parallel.
+fn run_rwlock(threads: usize) -> f64 {
+    let (ctx, addrs) = ctx_with_data();
+    let ctx = Arc::new(RwLock::new(ctx));
+    let wall = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let ctx = Arc::clone(&ctx);
+            let addrs = addrs.clone();
+            std::thread::spawn(move || {
+                let mut buf = vec![0u8; READ_LEN];
+                for i in 0..READS_PER_THREAD {
+                    let a = addrs[(t + i) % addrs.len()];
+                    ctx.read().unwrap().read(a, &mut buf).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (threads * READS_PER_THREAD) as f64 / wall.elapsed().as_secs_f64()
+}
+
+fn main() {
+    section("read throughput scaling: Mutex (old) vs RwLock (new)");
+    println!(
+        "{:<10} {:>16} {:>16} {:>10}",
+        "threads", "mutex ops/s", "rwlock ops/s", "speedup"
+    );
+    let mut base_1t = 0.0f64;
+    for threads in [1usize, 2, 4, 8] {
+        let m = run_mutex(threads);
+        let r = run_rwlock(threads);
+        if threads == 1 {
+            base_1t = r;
+        }
+        println!("{threads:<10} {m:>16.0} {r:>16.0} {:>9.2}x", r / m);
+    }
+    if base_1t > 0.0 {
+        println!(
+            "\n(rwlock 8t vs rwlock 1t shows scaling; mutex column flatlines by design)"
+        );
+    }
+}

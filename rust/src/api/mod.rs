@@ -169,16 +169,18 @@ impl EmucxlContext {
     }
 
     /// Price a CXL.io configuration op onto the virtual timeline.
-    fn charge_mmio(&mut self) {
+    fn charge_mmio(&self) {
         self.engine.record(&AccessDesc::mmio());
     }
 
     /// Price a data access using the queue depth the device observed.
-    fn charge(&mut self, op: Op, path: AccessPath, bytes: usize) -> f32 {
+    /// `&self`: clock, telemetry and controller drain are all behind
+    /// interior mutability, so concurrent readers can price in parallel.
+    fn charge(&self, op: Op, path: AccessPath, bytes: usize) -> f32 {
         // Drain the controller queue estimate up to the current virtual
         // time before pricing the next access.
         let now = self.engine.clock().now_ns();
-        self.device.controller_mut().advance_to(now);
+        self.device.drain_controller(now);
         let desc = AccessDesc {
             op,
             node: if path.via_cxl { 1 } else { 0 },
@@ -293,6 +295,13 @@ impl EmucxlContext {
         Ok(self.registry.containing(addr)?.1.size)
     }
 
+    /// Allocation containing `addr` (base address + metadata). This is the
+    /// read-concurrent registry lookup the coordinator uses for ownership
+    /// and bounds checks without taking any exclusive lock.
+    pub fn alloc_containing(&self, addr: VAddr) -> Result<(VAddr, AllocMeta)> {
+        self.registry.containing(addr)
+    }
+
     /// `emucxl_stats(node)` — allocation totals for one node.
     pub fn stats(&self, node: u32) -> Result<NodeStats> {
         let spec = self.device.topology().node(node)?;
@@ -306,8 +315,9 @@ impl EmucxlContext {
 
     // ----- data path ------------------------------------------------------
 
-    /// `emucxl_read(addr, 0, buf, buf.len())`.
-    pub fn read(&mut self, addr: VAddr, buf: &mut [u8]) -> Result<f32> {
+    /// `emucxl_read(addr, 0, buf, buf.len())`. Takes `&self` — reads are
+    /// the concurrent path: any number of threads may read in parallel.
+    pub fn read(&self, addr: VAddr, buf: &mut [u8]) -> Result<f32> {
         let _op = obs::enter_op();
         let t0 = self.now_ns();
         let r = self.read_inner(addr, buf);
@@ -315,14 +325,14 @@ impl EmucxlContext {
         r
     }
 
-    fn read_inner(&mut self, addr: VAddr, buf: &mut [u8]) -> Result<f32> {
+    fn read_inner(&self, addr: VAddr, buf: &mut [u8]) -> Result<f32> {
         self.fd()?;
         let path = self.device.read(addr, buf)?;
         Ok(self.charge(Op::Read, path, buf.len()))
     }
 
     /// `emucxl_read` with an explicit offset from `addr`.
-    pub fn read_at(&mut self, addr: VAddr, offset: usize, buf: &mut [u8]) -> Result<f32> {
+    pub fn read_at(&self, addr: VAddr, offset: usize, buf: &mut [u8]) -> Result<f32> {
         self.read(addr.offset(offset as u64), buf)
     }
 
@@ -410,6 +420,12 @@ impl EmucxlContext {
     /// The timing engine (cross-checks, params).
     pub fn engine(&self) -> &TimingEngine {
         &self.engine
+    }
+
+    /// Lock-free handle to the virtual clock (shared with the coordinator
+    /// so `now_ns` never needs a pool lock).
+    pub fn clock(&self) -> Arc<crate::timing::clock::VirtualClock> {
+        self.engine.clock_handle()
     }
 
     pub fn engine_mut(&mut self) -> &mut TimingEngine {

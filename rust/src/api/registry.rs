@@ -4,6 +4,13 @@
 //! allocation/deallocation of emucxl library is maintained in the data
 //! structure which is utilized by emucxl_is_local, emucxl_get_numa_node,
 //! emucxl_get_size and emucxl_stats". This is that data structure.
+//!
+//! All lookup methods (`get`, `containing`, `bytes_on`, …) take `&self`
+//! and return *owned* metadata ([`AllocMeta`] is `Copy`), so callers
+//! holding only a shared reference to the context — the coordinator's
+//! concurrent read path — can validate ownership and bounds without
+//! borrowing into the map. Mutation (`insert`/`remove`) stays exclusive:
+//! it only ever happens under the alloc/free/migrate write path.
 
 use std::collections::BTreeMap;
 

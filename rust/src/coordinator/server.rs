@@ -6,9 +6,31 @@
 //! connect over TCP, register as tenants with a byte quota, and drive the
 //! emucxl API plus a shared key-value store through the wire protocol.
 //!
-//! Threading model: thread-per-connection for request handling (requests
-//! mutate the shared pool under one mutex — the pool *is* one machine's
-//! memory), with latency pricing pushed OUT of the lock onto the dynamic
+//! # Threading model
+//!
+//! Thread-per-connection for request handling. The pool state is split
+//! into three independently locked pieces instead of one global mutex:
+//!
+//! * `tenants: Mutex<TenantTable>` — registration, quota accounting,
+//!   ownership checks. Held briefly; never across a data access.
+//! * `ctx: RwLock<EmucxlContext>` — the emulated appliance. **Reads take
+//!   the read lock**: `EmucxlContext::read`, `is_local`, `stats` and the
+//!   KV in-place GET path all work through `&self` (the virtual clock is
+//!   an atomic, telemetry counters are atomics, and the device shards its
+//!   page storage behind per-node locks), so any number of tenants read
+//!   concurrently. Writes, allocs, frees, migrates and KV promotions take
+//!   the write lock.
+//! * `kv: Mutex<KvStore>` — the KV index/LRU metadata. GETs that don't
+//!   promote run with `kv` + the ctx *read* lock; promotion bounces to
+//!   the exclusive path ([`SharedGet::NeedsExclusive`]).
+//!
+//! **Lock order: tenants → ctx → kv.** Any handler taking more than one
+//! of these locks must acquire them in that order (and may release early);
+//! never acquire a lower lock while holding a higher one in reverse.
+//! `record_request` and `now_ns` take no pool lock at all — virtual time
+//! comes from a shared atomic clock handle.
+//!
+//! Latency pricing is pushed OUT of every lock onto the dynamic
 //! [`TimingBatcher`], which batches concurrent tenants' descriptors into
 //! single XLA artifact executions.
 
@@ -16,7 +38,7 @@ use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::api::{EmucxlContext, NODE_LOCAL};
@@ -26,8 +48,9 @@ use crate::coordinator::proto::{read_frame, write_frame, Request, Response};
 use crate::coordinator::tenant::TenantTable;
 use crate::error::{EmucxlError, Result};
 use crate::mem::vaspace::VAddr;
-use crate::middleware::kv::{GetPolicy, KvStore};
+use crate::middleware::kv::{GetPolicy, KvStore, SharedGet};
 use crate::obs::{self, Subsystem};
+use crate::timing::clock::VirtualClock;
 use crate::timing::desc::AccessDesc;
 
 /// Coordinator configuration.
@@ -43,6 +66,10 @@ pub struct PoolConfig {
     pub max_wait: Duration,
     /// On shutdown, dump the full flight-recorder ring (JSONL) here.
     pub trace_dump: Option<PathBuf>,
+    /// Override the flight-recorder ring capacity (events). Best-effort:
+    /// the ring is sized at first use, so this only applies when the
+    /// server starts before anything else records a trace event.
+    pub recorder_capacity: Option<usize>,
 }
 
 impl Default for PoolConfig {
@@ -54,18 +81,20 @@ impl Default for PoolConfig {
             batch: 64,
             max_wait: Duration::from_micros(200),
             trace_dump: None,
+            recorder_capacity: None,
         }
     }
 }
 
-struct PoolState {
-    ctx: EmucxlContext,
-    kv: KvStore,
-    tenants: TenantTable,
-}
-
+/// The pool's shared state: three locks (see the module docs for the
+/// locking discipline) plus lock-free companions.
 struct SharedPool {
-    state: Mutex<PoolState>,
+    tenants: Mutex<TenantTable>,
+    ctx: RwLock<EmucxlContext>,
+    kv: Mutex<KvStore>,
+    /// Same clock the context's timing engine advances — lock-free
+    /// `now_ns` for timestamps and monotonicity checks.
+    clock: Arc<VirtualClock>,
     batcher: TimingBatcher,
     stop: AtomicBool,
 }
@@ -81,6 +110,11 @@ pub struct PoolServer {
 impl PoolServer {
     /// Bind to `127.0.0.1:port` (0 = ephemeral) and start serving.
     pub fn start(config: PoolConfig, port: u16) -> Result<Self> {
+        if let Some(cap) = config.recorder_capacity {
+            // Best-effort by contract; too late only if something already
+            // recorded a trace event in this process.
+            let _ = obs::set_recorder_capacity(cap);
+        }
         // The batcher gets the artifact dir; the context prices natively
         // (identical math, cross-checked by tests) so correctness ops never
         // block on the batch path.
@@ -89,11 +123,8 @@ impl PoolServer {
         emucxl_cfg.engine_mode = crate::timing::engine::EngineMode::Native;
         emucxl_cfg.artifacts_dir = None;
 
-        let state = PoolState {
-            ctx: EmucxlContext::init(emucxl_cfg)?,
-            kv: KvStore::new(config.kv_local_capacity, config.kv_policy),
-            tenants: TenantTable::new(),
-        };
+        let ctx = EmucxlContext::init(emucxl_cfg)?;
+        let clock = ctx.clock();
         let batcher = TimingBatcher::start(
             artifacts,
             config.emucxl.params,
@@ -103,7 +134,10 @@ impl PoolServer {
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
         let shared = Arc::new(SharedPool {
-            state: Mutex::new(state),
+            tenants: Mutex::new(TenantTable::new()),
+            ctx: RwLock::new(ctx),
+            kv: Mutex::new(KvStore::new(config.kv_local_capacity, config.kv_policy)),
+            clock,
             batcher,
             stop: AtomicBool::new(false),
         });
@@ -122,7 +156,7 @@ impl PoolServer {
 
     /// Number of connected tenants.
     pub fn tenant_count(&self) -> usize {
-        self.shared.state.lock().unwrap().tenants.len()
+        self.shared.tenants.lock().unwrap().len()
     }
 
     /// Batcher statistics: (flushes, descriptors priced).
@@ -130,9 +164,9 @@ impl PoolServer {
         self.shared.batcher.stats()
     }
 
-    /// Virtual time of the pool.
+    /// Virtual time of the pool. Lock-free (atomic clock).
     pub fn now_ns(&self) -> u64 {
-        self.shared.state.lock().unwrap().ctx.now_ns()
+        self.shared.clock.now_ns()
     }
 
     /// Stop accepting and join the accept thread. If the config named a
@@ -146,7 +180,7 @@ impl PoolServer {
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
-        let ts = self.shared.state.lock().unwrap().ctx.now_ns();
+        let ts = self.shared.clock.now_ns();
         obs::record(Subsystem::Coordinator, "shutdown", ts, 0, 0, 0.0, true);
         if let Some(path) = &self.trace_dump {
             let dump = obs::recorder().dump_jsonl(usize::MAX);
@@ -173,6 +207,9 @@ fn accept_loop(listener: TcpListener, shared: Arc<SharedPool>) {
             Ok(s) => s,
             Err(_) => continue,
         };
+        // Reap finished connections so a long-lived daemon doesn't grow
+        // the handle vector without bound.
+        handlers.retain(|h| !h.is_finished());
         let s2 = Arc::clone(&shared);
         handlers.push(
             std::thread::Builder::new()
@@ -213,6 +250,8 @@ fn op_name(req: &Request) -> &'static str {
 
 /// Per-request bookkeeping: coordinator counters/histograms, per-tenant
 /// series, and one flight-recorder event stamped with pool virtual time.
+/// Takes no ctx lock — the timestamp comes from the atomic clock; only
+/// the brief tenants lock is touched, and only for per-tenant gauges.
 fn record_request(
     shared: &Arc<SharedPool>,
     tenant_id: Option<u32>,
@@ -236,35 +275,35 @@ fn record_request(
     )
     .observe(wall_ns);
 
-    let ts = {
-        let mut st = shared.state.lock().unwrap();
-        if let Some(id) = tenant_id {
-            let tenant = id.to_string();
-            let tenant: &str = tenant.as_str();
-            m.counter(
-                "emucxl_tenant_ops_total",
-                "coordinator requests by tenant and op",
-                &[("tenant", tenant), ("op", op)],
+    if let Some(id) = tenant_id {
+        let tenant = id.to_string();
+        let tenant: &str = tenant.as_str();
+        m.counter(
+            "emucxl_tenant_ops_total",
+            "coordinator requests by tenant and op",
+            &[("tenant", tenant), ("op", op)],
+        )
+        .inc();
+        let snap = {
+            let tenants = shared.tenants.lock().unwrap();
+            tenants.get(id).ok().map(|t| (t.quota, t.used))
+        };
+        if let Some((quota, used)) = snap {
+            m.gauge(
+                "emucxl_tenant_quota_bytes",
+                "tenant byte quota",
+                &[("tenant", tenant)],
             )
-            .inc();
-            if let Ok(t) = st.tenants.get_mut(id) {
-                let (quota, used) = (t.quota, t.used);
-                m.gauge(
-                    "emucxl_tenant_quota_bytes",
-                    "tenant byte quota",
-                    &[("tenant", tenant)],
-                )
-                .set(quota.min(i64::MAX as usize) as i64);
-                m.gauge(
-                    "emucxl_tenant_used_bytes",
-                    "tenant bytes charged against quota",
-                    &[("tenant", tenant)],
-                )
-                .set(used.min(i64::MAX as usize) as i64);
-            }
+            .set(quota.min(i64::MAX as usize) as i64);
+            m.gauge(
+                "emucxl_tenant_used_bytes",
+                "tenant bytes charged against quota",
+                &[("tenant", tenant)],
+            )
+            .set(used.min(i64::MAX as usize) as i64);
         }
-        st.ctx.now_ns()
-    };
+    }
+    let ts = shared.clock.now_ns();
     obs::record(Subsystem::Coordinator, op, ts, 0, 0, wall_ns as f32, ok);
 }
 
@@ -307,18 +346,54 @@ fn serve_connection(stream: TcpStream, shared: Arc<SharedPool>) -> Result<()> {
     }
 
     // Disconnect: reclaim everything the tenant still owns.
+    // Lock order tenants -> ctx: take the table entry out first, then free.
     if let Some(id) = tenant_id {
-        let mut st = shared.state.lock().unwrap();
-        if let Some(tenant) = st.tenants.remove(id) {
+        let (removed, count) = {
+            let mut tenants = shared.tenants.lock().unwrap();
+            let t = tenants.remove(id);
+            (t, tenants.len())
+        };
+        if let Some(tenant) = removed {
+            let mut ctx = shared.ctx.write().unwrap();
             for addr in tenant.owned_addrs() {
-                let _ = st.ctx.free(VAddr(addr));
+                let _ = ctx.free(VAddr(addr));
             }
         }
         obs::metrics()
             .gauge("emucxl_coordinator_tenants", "currently registered tenants", &[])
-            .set(st.tenants.len() as i64);
+            .set(count as i64);
     }
     Ok(())
+}
+
+/// Validate that `tenant_id` owns the allocation containing `addr` and
+/// that `[addr, addr + len)` stays inside it. Returns the allocation's
+/// node for pricing. The caller passes both guards already held in lock
+/// order (tenants, then ctx) — this is the check that keeps one tenant
+/// out of another's memory and rejects bogus lengths *before* any reply
+/// buffer is allocated.
+fn check_access(
+    tenants: &TenantTable,
+    ctx: &EmucxlContext,
+    tenant_id: u32,
+    addr: u64,
+    len: usize,
+) -> std::result::Result<u32, EmucxlError> {
+    let (base, meta) = ctx.alloc_containing(VAddr(addr))?;
+    if !tenants.get(tenant_id)?.owns(base.0) {
+        // Deliberately indistinguishable from an unmapped address:
+        // don't leak other tenants' address-space layout.
+        return Err(EmucxlError::BadAddress(addr));
+    }
+    let offset = (addr - base.0) as usize;
+    if len > meta.size - offset {
+        return Err(EmucxlError::OutOfBounds {
+            addr,
+            len,
+            alloc_size: meta.size - offset,
+        });
+    }
+    Ok(meta.node)
 }
 
 fn handle_request(
@@ -338,28 +413,28 @@ fn handle_request(
     }
     match req {
         Request::Hello { quota } => {
-            let mut st = shared.state.lock().unwrap();
-            let id = st.tenants.register(quota as usize);
+            let count;
+            let id = {
+                let mut tenants = shared.tenants.lock().unwrap();
+                let id = tenants.register(quota as usize);
+                count = tenants.len();
+                id
+            };
             *tenant_id = Some(id);
             obs::metrics()
                 .gauge("emucxl_coordinator_tenants", "currently registered tenants", &[])
-                .set(st.tenants.len() as i64);
+                .set(count as i64);
             Response::Welcome { tenant: id }
         }
         Request::Metrics => {
-            // Refresh point-in-time pool gauges under one lock, then render.
+            // Refresh point-in-time pool gauges, then render. No ctx lock:
+            // tenant count comes from the tenants table, virtual time from
+            // the atomic clock.
             let m = obs::metrics();
-            {
-                let st = shared.state.lock().unwrap();
-                m.gauge("emucxl_coordinator_tenants", "currently registered tenants", &[])
-                    .set(st.tenants.len() as i64);
-                m.gauge(
-                    "emucxl_pool_virtual_time_ns",
-                    "virtual time of the shared pool",
-                    &[],
-                )
-                .set(st.ctx.now_ns().min(i64::MAX as u64) as i64);
-            }
+            m.gauge("emucxl_coordinator_tenants", "currently registered tenants", &[])
+                .set(shared.tenants.lock().unwrap().len() as i64);
+            m.gauge("emucxl_pool_virtual_time_ns", "virtual time of the shared pool", &[])
+                .set(shared.clock.now_ns().min(i64::MAX as u64) as i64);
             Response::Text { body: m.render() }
         }
         Request::TraceDump { max } => {
@@ -368,10 +443,11 @@ fn handle_request(
         }
         Request::Alloc { size, node } => {
             let id = tenant_id.unwrap();
+            // tenants -> ctx, admission first: don't touch the pool if
+            // over quota.
             let addr = {
-                let mut st = shared.state.lock().unwrap();
-                match st.tenants.get_mut(id).and_then(|t| {
-                    // admission first: don't touch the pool if over quota
+                let mut tenants = shared.tenants.lock().unwrap();
+                match tenants.get(id).and_then(|t| {
                     if t.headroom() < size as usize {
                         Err(EmucxlError::QuotaExceeded {
                             tenant: id,
@@ -385,27 +461,28 @@ fn handle_request(
                     Ok(()) => {}
                     Err(e) => return err_resp(&e),
                 }
-                let addr = match st.ctx.alloc(size as usize, node) {
+                let mut ctx = shared.ctx.write().unwrap();
+                let addr = match ctx.alloc(size as usize, node) {
                     Ok(a) => a,
                     Err(e) => return err_resp(&e),
                 };
                 if let Err(e) =
-                    st.tenants.get_mut(id).and_then(|t| t.charge(addr.0, size as usize))
+                    tenants.get_mut(id).and_then(|t| t.charge(addr.0, size as usize))
                 {
-                    let _ = st.ctx.free(addr);
+                    let _ = ctx.free(addr);
                     return err_resp(&e);
                 }
                 addr
             };
-            // Price the configuration op outside the lock, on the batcher.
+            // Price the configuration op outside the locks, on the batcher.
             let lat = shared.batcher.price(AccessDesc::mmio());
             Response::Addr { addr: addr.0, lat_ns: lat }
         }
         Request::Free { addr } => {
             let id = tenant_id.unwrap();
             {
-                let mut st = shared.state.lock().unwrap();
-                match st.tenants.get_mut(id).and_then(|t| {
+                let mut tenants = shared.tenants.lock().unwrap();
+                match tenants.get(id).and_then(|t| {
                     if t.owns(addr) {
                         Ok(())
                     } else {
@@ -415,23 +492,31 @@ fn handle_request(
                     Ok(()) => {}
                     Err(e) => return err_resp(&e),
                 }
-                if let Err(e) = st.ctx.free(VAddr(addr)) {
+                let mut ctx = shared.ctx.write().unwrap();
+                if let Err(e) = ctx.free(VAddr(addr)) {
                     return err_resp(&e);
                 }
-                let _ = st.tenants.get_mut(id).and_then(|t| t.credit(addr));
+                let _ = tenants.get_mut(id).and_then(|t| t.credit(addr));
             }
             let lat = shared.batcher.price(AccessDesc::mmio());
             Response::Ok { lat_ns: lat }
         }
         Request::Read { addr, len } => {
+            let id = tenant_id.unwrap();
+            // The concurrent path: ctx READ lock only. Ownership and
+            // length are validated against the registry before the reply
+            // buffer is allocated — a bogus `len` can't OOM the daemon
+            // and a tenant can't read another tenant's memory.
             let (data, node) = {
-                let mut st = shared.state.lock().unwrap();
-                let node = match st.ctx.get_numa_node(VAddr(addr)) {
+                let tenants = shared.tenants.lock().unwrap();
+                let ctx = shared.ctx.read().unwrap();
+                let node = match check_access(&tenants, &ctx, id, addr, len as usize) {
                     Ok(n) => n,
                     Err(e) => return err_resp(&e),
                 };
+                drop(tenants); // the data access needs only the read lock
                 let mut buf = vec![0u8; len as usize];
-                if let Err(e) = st.ctx.read(VAddr(addr), &mut buf) {
+                if let Err(e) = ctx.read(VAddr(addr), &mut buf) {
                     return err_resp(&e);
                 }
                 (buf, node)
@@ -441,13 +526,16 @@ fn handle_request(
             Response::Data { data, lat_ns: lat }
         }
         Request::Write { addr, data } => {
+            let id = tenant_id.unwrap();
             let node = {
-                let mut st = shared.state.lock().unwrap();
-                let node = match st.ctx.get_numa_node(VAddr(addr)) {
+                let tenants = shared.tenants.lock().unwrap();
+                let mut ctx = shared.ctx.write().unwrap();
+                let node = match check_access(&tenants, &ctx, id, addr, data.len()) {
                     Ok(n) => n,
                     Err(e) => return err_resp(&e),
                 };
-                if let Err(e) = st.ctx.write(VAddr(addr), &data) {
+                drop(tenants);
+                if let Err(e) = ctx.write(VAddr(addr), &data) {
                     return err_resp(&e);
                 }
                 node
@@ -460,8 +548,8 @@ fn handle_request(
         Request::Migrate { addr, node } => {
             let id = tenant_id.unwrap();
             let (new_addr, size, src_node) = {
-                let mut st = shared.state.lock().unwrap();
-                match st.tenants.get_mut(id).and_then(|t| {
+                let mut tenants = shared.tenants.lock().unwrap();
+                match tenants.get(id).and_then(|t| {
                     if t.owns(addr) {
                         Ok(())
                     } else {
@@ -471,17 +559,18 @@ fn handle_request(
                     Ok(()) => {}
                     Err(e) => return err_resp(&e),
                 }
-                let size = match st.ctx.get_size(VAddr(addr)) {
+                let mut ctx = shared.ctx.write().unwrap();
+                let size = match ctx.get_size(VAddr(addr)) {
                     Ok(s) => s,
                     Err(e) => return err_resp(&e),
                 };
-                let src = st.ctx.get_numa_node(VAddr(addr)).unwrap_or(0);
-                let new_addr = match st.ctx.migrate(VAddr(addr), node) {
+                let src = ctx.get_numa_node(VAddr(addr)).unwrap_or(0);
+                let new_addr = match ctx.migrate(VAddr(addr), node) {
                     Ok(a) => a,
                     Err(e) => return err_resp(&e),
                 };
                 if new_addr.0 != addr {
-                    let _ = st.tenants.get_mut(id).and_then(|t| t.rekey(addr, new_addr.0));
+                    let _ = tenants.get_mut(id).and_then(|t| t.rekey(addr, new_addr.0));
                 }
                 (new_addr, size, src)
             };
@@ -493,15 +582,15 @@ fn handle_request(
             Response::Addr { addr: new_addr.0, lat_ns: lats.iter().sum() }
         }
         Request::IsLocal { addr } => {
-            let st = shared.state.lock().unwrap();
-            match st.ctx.is_local(VAddr(addr)) {
+            let ctx = shared.ctx.read().unwrap();
+            match ctx.is_local(VAddr(addr)) {
                 Ok(v) => Response::Bool { value: v },
                 Err(e) => err_resp(&e),
             }
         }
         Request::Stats { node } => {
-            let st = shared.state.lock().unwrap();
-            match st.ctx.stats(node) {
+            let ctx = shared.ctx.read().unwrap();
+            match ctx.stats(node) {
                 Ok(s) => Response::Stats {
                     allocated: s.allocated_bytes as u64,
                     page_bytes: s.page_bytes as u64,
@@ -513,9 +602,9 @@ fn handle_request(
         Request::KvPut { key, value } => {
             let vlen = value.len();
             {
-                let mut st = shared.state.lock().unwrap();
-                let PoolState { ctx, kv, .. } = &mut *st;
-                if let Err(e) = kv.put(ctx, &key, &value) {
+                let mut ctx = shared.ctx.write().unwrap();
+                let mut kv = shared.kv.lock().unwrap();
+                if let Err(e) = kv.put(&mut ctx, &key, &value) {
                     return err_resp(&e);
                 }
             }
@@ -525,12 +614,27 @@ fn handle_request(
             Response::Ok { lat_ns: lat }
         }
         Request::KvGet { key } => {
+            // Try the shared path first: ctx read lock + kv lock. Only a
+            // GET that must promote (move data between nodes) retries
+            // under the exclusive ctx lock.
             let (value, remote) = {
-                let mut st = shared.state.lock().unwrap();
-                let remote = st.kv.tier_of(&key) == Some("remote");
-                let PoolState { ctx, kv, .. } = &mut *st;
-                match kv.get(ctx, &key) {
-                    Ok(v) => (v, remote),
+                let ctx = shared.ctx.read().unwrap();
+                let mut kv = shared.kv.lock().unwrap();
+                let remote = kv.tier_of(&key) == Some("remote");
+                match kv.get_shared(&ctx, &key) {
+                    Ok(SharedGet::Done(v)) => (v, remote),
+                    Ok(SharedGet::NeedsExclusive) => {
+                        drop(kv);
+                        drop(ctx);
+                        let mut ctx = shared.ctx.write().unwrap();
+                        let mut kv = shared.kv.lock().unwrap();
+                        // A racing delete between the two acquisitions is
+                        // fine: get() reports a miss.
+                        match kv.get(&mut ctx, &key) {
+                            Ok(v) => (v, remote),
+                            Err(e) => return err_resp(&e),
+                        }
+                    }
                     Err(e) => return err_resp(&e),
                 }
             };
@@ -542,9 +646,9 @@ fn handle_request(
         }
         Request::KvDelete { key } => {
             let existed = {
-                let mut st = shared.state.lock().unwrap();
-                let PoolState { ctx, kv, .. } = &mut *st;
-                match kv.delete(ctx, &key) {
+                let mut ctx = shared.ctx.write().unwrap();
+                let mut kv = shared.kv.lock().unwrap();
+                match kv.delete(&mut ctx, &key) {
                     Ok(v) => v,
                     Err(e) => return err_resp(&e),
                 }

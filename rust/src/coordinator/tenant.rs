@@ -89,6 +89,12 @@ impl TenantTable {
         id
     }
 
+    pub fn get(&self, id: u32) -> Result<&Tenant> {
+        self.tenants
+            .get(&id)
+            .ok_or_else(|| EmucxlError::Protocol(format!("unknown tenant {id}")))
+    }
+
     pub fn get_mut(&mut self, id: u32) -> Result<&mut Tenant> {
         self.tenants
             .get_mut(&id)

@@ -8,16 +8,27 @@
 //! Behind the file interface sit the per-node arenas (`kmalloc_node`
 //! analog), the page table (`remap_pfn_range` analog) and the CXL
 //! controller model that observes every access to CXL-backed nodes.
+//!
+//! Concurrency: the data path (`read`/`write`/`fill`/`copy`) takes `&self`.
+//! The page table and each node arena sit behind their own `RwLock`, so
+//! concurrent reads of different (or the same) pages proceed in parallel;
+//! the CXL controller model sits behind an `RwLock` whose write side is
+//! taken only for the short `record_mem`/`advance_to` updates.
+//! Configuration ops (`open`/`close`/`mmap`/`munmap`) keep `&mut self`
+//! receivers — the paper's control path is exclusive by design. Lock order
+//! within a single call is strictly sequential (pagetable, then one arena
+//! at a time, then controller); cross-node copies go through a bounce
+//! buffer precisely so two arena locks are never held at once.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard};
 
 use crate::device::controller::CxlController;
 use crate::error::{EmucxlError, Result};
 use crate::mem::arena::NodeArena;
 use crate::mem::pagetable::PageTable;
-use crate::mem::vaspace::{VAddr, VaSpace};
 use crate::mem::pages_for;
+use crate::mem::vaspace::{VAddr, VaSpace};
 use crate::obs::{self, Counter, Gauge, Subsystem};
 use crate::topology::{MemoryKind, NumaTopology};
 
@@ -140,10 +151,12 @@ impl DevObs {
 #[derive(Debug)]
 pub struct EmucxlDevice {
     topology: NumaTopology,
-    arenas: Vec<NodeArena>,
-    pagetable: PageTable,
-    vaspace: VaSpace,
-    controller: CxlController,
+    /// Per-node backing memory; each arena has its own readers/writer lock
+    /// so reads on different nodes (or the same node) never serialize.
+    arenas: Vec<RwLock<NodeArena>>,
+    pagetable: RwLock<PageTable>,
+    vaspace: Mutex<VaSpace>,
+    controller: RwLock<CxlController>,
     page_size: usize,
     next_fd: u32,
     open_fds: Vec<u32>,
@@ -165,10 +178,10 @@ impl EmucxlDevice {
         let obs = DevObs::new(&arenas, &topology);
         Self {
             topology,
-            arenas,
-            pagetable: PageTable::new(page_size),
-            vaspace: VaSpace::new(page_size),
-            controller: CxlController::default(),
+            arenas: arenas.into_iter().map(RwLock::new).collect(),
+            pagetable: RwLock::new(PageTable::new(page_size)),
+            vaspace: Mutex::new(VaSpace::new(page_size)),
+            controller: RwLock::new(CxlController::default()),
             page_size,
             next_fd: 3, // 0/1/2 are taken, as in a real process
             open_fds: Vec::new(),
@@ -178,7 +191,7 @@ impl EmucxlDevice {
     }
 
     fn sync_arena_gauge(&self, node: u32) {
-        let used = self.arenas[node as usize].allocated_bytes();
+        let used = self.arenas[node as usize].read().unwrap().allocated_bytes();
         self.obs.arena_used[node as usize].set(used.min(i64::MAX as usize) as i64);
     }
 
@@ -190,12 +203,16 @@ impl EmucxlDevice {
         self.page_size
     }
 
-    pub fn controller(&self) -> &CxlController {
-        &self.controller
+    /// Shared view of the CXL controller model (counters, queue state).
+    /// Field access works through the guard's `Deref`.
+    pub fn controller(&self) -> RwLockReadGuard<'_, CxlController> {
+        self.controller.read().unwrap()
     }
 
-    pub fn controller_mut(&mut self) -> &mut CxlController {
-        &mut self.controller
+    /// Drain the controller's queue estimate up to `now_ns` (short write
+    /// lock; called by the timing layer before pricing each access).
+    pub fn drain_controller(&self, now_ns: u64) {
+        self.controller.write().unwrap().advance_to(now_ns);
     }
 
     /// `open("/dev/emucxl")` — a CXL.io configuration operation.
@@ -203,7 +220,7 @@ impl EmucxlDevice {
         let fd = Fd(self.next_fd);
         self.next_fd += 1;
         self.open_fds.push(fd.0);
-        self.controller.record_io();
+        self.controller.write().unwrap().record_io();
         self.obs.io_ops.inc();
         fd
     }
@@ -221,7 +238,7 @@ impl EmucxlDevice {
     pub fn close(&mut self, fd: Fd) -> Result<usize> {
         self.check_fd(fd)?;
         self.open_fds.retain(|&f| f != fd.0);
-        self.controller.record_io();
+        self.controller.write().unwrap().record_io();
         self.obs.io_ops.inc();
         let leaked: Vec<VAddr> = self
             .fd_regions
@@ -250,27 +267,27 @@ impl EmucxlDevice {
         }
         self.topology.node(node)?;
         let pages = pages_for(len, self.page_size);
-        let start_frame = self.arenas[node as usize].alloc_pages(pages)?;
-        let addr = match self.vaspace.alloc(len) {
+        let start_frame = self.arenas[node as usize].write().unwrap().alloc_pages(pages)?;
+        let addr = match self.vaspace.lock().unwrap().alloc(len) {
             Ok(a) => a,
             Err(e) => {
-                self.arenas[node as usize].free_pages(start_frame, pages)?;
+                self.arenas[node as usize].write().unwrap().free_pages(start_frame, pages)?;
                 return Err(e);
             }
         };
-        if let Err(e) = self.pagetable.map(addr, node, start_frame, pages) {
-            self.arenas[node as usize].free_pages(start_frame, pages)?;
-            self.vaspace.free(addr, len)?;
+        if let Err(e) = self.pagetable.write().unwrap().map(addr, node, start_frame, pages) {
+            self.arenas[node as usize].write().unwrap().free_pages(start_frame, pages)?;
+            self.vaspace.lock().unwrap().free(addr, len)?;
             return Err(e);
         }
         self.fd_regions.insert(addr.0, fd.0);
         // Mapping setup is a configuration-path operation.
-        self.controller.record_io();
+        self.controller.write().unwrap().record_io();
         self.obs.io_ops.inc();
         self.obs.mmap_total.inc();
         self.obs.va_maps.inc();
         self.sync_arena_gauge(node);
-        let ts = self.controller.last_advance_ns();
+        let ts = self.controller.read().unwrap().last_advance_ns();
         obs::record(Subsystem::Device, "mmap", ts, addr.0, len as u64, 0.0, true);
         obs::record(Subsystem::Mem, "va_map", ts, addr.0, len as u64, 0.0, true);
         Ok(MappedRegion { addr, node, len, pages })
@@ -278,16 +295,19 @@ impl EmucxlDevice {
 
     /// `munmap(addr)` — tear down a mapping created by [`Self::mmap`].
     pub fn munmap(&mut self, addr: VAddr) -> Result<()> {
-        let extent = self.pagetable.unmap(addr)?;
-        self.arenas[extent.node as usize].free_pages(extent.start_frame, extent.pages)?;
-        self.vaspace.free(addr, extent.pages * self.page_size)?;
+        let extent = self.pagetable.write().unwrap().unmap(addr)?;
+        self.arenas[extent.node as usize]
+            .write()
+            .unwrap()
+            .free_pages(extent.start_frame, extent.pages)?;
+        self.vaspace.lock().unwrap().free(addr, extent.pages * self.page_size)?;
         self.fd_regions.remove(&addr.0);
-        self.controller.record_io();
+        self.controller.write().unwrap().record_io();
         self.obs.io_ops.inc();
         self.obs.munmap_total.inc();
         self.obs.va_unmaps.inc();
         self.sync_arena_gauge(extent.node);
-        let ts = self.controller.last_advance_ns();
+        let ts = self.controller.read().unwrap().last_advance_ns();
         let bytes = (extent.pages * self.page_size) as u64;
         obs::record(Subsystem::Device, "munmap", ts, addr.0, bytes, 0.0, true);
         obs::record(Subsystem::Mem, "va_unmap", ts, addr.0, bytes, 0.0, true);
@@ -296,13 +316,18 @@ impl EmucxlDevice {
 
     /// Which node backs `addr` (errors if unmapped).
     pub fn node_of(&self, addr: VAddr) -> Result<u32> {
-        Ok(self.pagetable.resolve(addr)?.node)
+        Ok(self.pagetable.read().unwrap().resolve(addr)?.node)
     }
 
-    fn classify(&mut self, node: u32, is_write: bool, bytes: usize) -> AccessPath {
+    fn classify(&self, node: u32, is_write: bool, bytes: usize) -> AccessPath {
         let via_cxl = self.topology.nodes()[node as usize].kind == MemoryKind::CxlMem;
-        let qdepth = if via_cxl { self.controller.record_mem(is_write, bytes) } else { 0.0 };
+        let mut qdepth = 0.0;
         if via_cxl {
+            {
+                let mut ctrl = self.controller.write().unwrap();
+                qdepth = ctrl.record_mem(is_write, bytes);
+                self.obs.link_queue_depth.set(ctrl.queue_depth() as i64);
+            }
             let (ops, byte_ctr) = if is_write {
                 (&self.obs.mem_writes, &self.obs.mem_write_bytes)
             } else {
@@ -310,15 +335,15 @@ impl EmucxlDevice {
             };
             ops.inc();
             byte_ctr.add(bytes as u64);
-            self.obs.link_queue_depth.set(self.controller.queue_depth() as i64);
         }
         AccessPath { node, via_cxl, qdepth }
     }
 
     /// Load `out.len()` bytes from `addr`. Returns the access path taken
-    /// (the timing engine turns it into latency).
-    pub fn read(&mut self, addr: VAddr, out: &mut [u8]) -> Result<AccessPath> {
-        let r = self.pagetable.resolve(addr)?;
+    /// (the timing engine turns it into latency). Thread-safe (`&self`):
+    /// any number of readers proceed in parallel.
+    pub fn read(&self, addr: VAddr, out: &mut [u8]) -> Result<AccessPath> {
+        let r = self.pagetable.read().unwrap().resolve(addr)?;
         if out.len() > r.remaining {
             return Err(EmucxlError::OutOfBounds {
                 addr: addr.0,
@@ -326,13 +351,13 @@ impl EmucxlDevice {
                 alloc_size: r.remaining,
             });
         }
-        self.arenas[r.node as usize].read(r.start_frame, r.offset, out)?;
+        self.arenas[r.node as usize].read().unwrap().read(r.start_frame, r.offset, out)?;
         Ok(self.classify(r.node, false, out.len()))
     }
 
     /// Store `data` at `addr`.
-    pub fn write(&mut self, addr: VAddr, data: &[u8]) -> Result<AccessPath> {
-        let r = self.pagetable.resolve(addr)?;
+    pub fn write(&self, addr: VAddr, data: &[u8]) -> Result<AccessPath> {
+        let r = self.pagetable.read().unwrap().resolve(addr)?;
         if data.len() > r.remaining {
             return Err(EmucxlError::OutOfBounds {
                 addr: addr.0,
@@ -340,27 +365,30 @@ impl EmucxlDevice {
                 alloc_size: r.remaining,
             });
         }
-        self.arenas[r.node as usize].write(r.start_frame, r.offset, data)?;
+        self.arenas[r.node as usize].write().unwrap().write(r.start_frame, r.offset, data)?;
         Ok(self.classify(r.node, true, data.len()))
     }
 
     /// Fill `len` bytes at `addr` with `value`.
-    pub fn fill(&mut self, addr: VAddr, len: usize, value: u8) -> Result<AccessPath> {
-        let r = self.pagetable.resolve(addr)?;
+    pub fn fill(&self, addr: VAddr, len: usize, value: u8) -> Result<AccessPath> {
+        let r = self.pagetable.read().unwrap().resolve(addr)?;
         if len > r.remaining {
             return Err(EmucxlError::OutOfBounds { addr: addr.0, len, alloc_size: r.remaining });
         }
-        self.arenas[r.node as usize].fill(r.start_frame, r.offset, len, value)?;
+        self.arenas[r.node as usize].write().unwrap().fill(r.start_frame, r.offset, len, value)?;
         Ok(self.classify(r.node, true, len))
     }
 
     /// Copy `len` bytes from `src` to `dst` (cross-node allowed). Returns
     /// the (read-path, write-path) pair. Overlap-safe when src and dst are
-    /// in the same extent (memmove semantics); non-overlapping extents copy
-    /// through a bounce buffer like the CPU would.
-    pub fn copy(&mut self, dst: VAddr, src: VAddr, len: usize) -> Result<(AccessPath, AccessPath)> {
-        let rs = self.pagetable.resolve(src)?;
-        let rd = self.pagetable.resolve(dst)?;
+    /// in the same extent (memmove semantics); cross-node copies go through
+    /// a bounce buffer like the CPU would — which also means the two arena
+    /// locks are taken strictly one after the other, never nested.
+    pub fn copy(&self, dst: VAddr, src: VAddr, len: usize) -> Result<(AccessPath, AccessPath)> {
+        let (rs, rd) = {
+            let pt = self.pagetable.read().unwrap();
+            (pt.resolve(src)?, pt.resolve(dst)?)
+        };
         if len > rs.remaining {
             return Err(EmucxlError::OutOfBounds { addr: src.0, len, alloc_size: rs.remaining });
         }
@@ -368,7 +396,7 @@ impl EmucxlDevice {
             return Err(EmucxlError::OutOfBounds { addr: dst.0, len, alloc_size: rd.remaining });
         }
         if rs.node == rd.node {
-            self.arenas[rs.node as usize].copy_within(
+            self.arenas[rs.node as usize].write().unwrap().copy_within(
                 rs.start_frame,
                 rs.offset,
                 rd.start_frame,
@@ -377,8 +405,14 @@ impl EmucxlDevice {
             )?;
         } else {
             let mut bounce = vec![0u8; len];
-            self.arenas[rs.node as usize].read(rs.start_frame, rs.offset, &mut bounce)?;
-            self.arenas[rd.node as usize].write(rd.start_frame, rd.offset, &bounce)?;
+            self.arenas[rs.node as usize]
+                .read()
+                .unwrap()
+                .read(rs.start_frame, rs.offset, &mut bounce)?;
+            self.arenas[rd.node as usize]
+                .write()
+                .unwrap()
+                .write(rd.start_frame, rd.offset, &bounce)?;
         }
         let rp = self.classify(rs.node, false, len);
         let wp = self.classify(rd.node, true, len);
@@ -388,18 +422,18 @@ impl EmucxlDevice {
     /// Bytes currently allocated on `node` (for `emucxl_stats`).
     pub fn allocated_on(&self, node: u32) -> Result<usize> {
         self.topology.node(node)?;
-        Ok(self.arenas[node as usize].allocated_bytes())
+        Ok(self.arenas[node as usize].read().unwrap().allocated_bytes())
     }
 
     /// Free bytes on `node`.
     pub fn free_on(&self, node: u32) -> Result<usize> {
         self.topology.node(node)?;
-        Ok(self.arenas[node as usize].free_bytes())
+        Ok(self.arenas[node as usize].read().unwrap().free_bytes())
     }
 
     /// Number of live mappings.
     pub fn mapping_count(&self) -> usize {
-        self.pagetable.len()
+        self.pagetable.read().unwrap().len()
     }
 }
 
@@ -437,10 +471,16 @@ mod tests {
         let mut d = dev();
         let fd = d.open();
         let m = d.mmap(fd, 4096, 0).unwrap();
-        let before = d.controller().mem_reads.ops + d.controller().mem_writes.ops;
+        let before = {
+            let c = d.controller();
+            c.mem_reads.ops + c.mem_writes.ops
+        };
         let p = d.write(m.addr, &[1, 2, 3]).unwrap();
         assert!(!p.via_cxl);
-        let after = d.controller().mem_reads.ops + d.controller().mem_writes.ops;
+        let after = {
+            let c = d.controller();
+            c.mem_reads.ops + c.mem_writes.ops
+        };
         assert_eq!(before, after);
     }
 
@@ -534,6 +574,33 @@ mod tests {
         d.read(mid, &mut out).unwrap();
         assert_eq!(out, [9, 9]);
         assert_eq!(d.node_of(mid).unwrap(), 1);
+    }
+
+    #[test]
+    fn concurrent_reads_through_shared_reference() {
+        use std::sync::Arc as StdArc;
+        let mut d = dev();
+        let fd = d.open();
+        let m = d.mmap(fd, 4096, 1).unwrap();
+        d.write(m.addr, &[0x5A; 4096]).unwrap();
+        let d = StdArc::new(d);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let d = StdArc::clone(&d);
+                let addr = m.addr;
+                std::thread::spawn(move || {
+                    let mut buf = [0u8; 512];
+                    for _ in 0..100 {
+                        d.read(addr, &mut buf).unwrap();
+                        assert!(buf.iter().all(|&b| b == 0x5A));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(d.controller().mem_reads.ops, 400);
     }
 
     #[test]

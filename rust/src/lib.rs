@@ -33,6 +33,27 @@
 //! JSONL event dump) in another; the same data is available over the wire
 //! via `coordinator::proto::Request::{Metrics, TraceDump}`.
 //!
+//! ## Concurrency
+//!
+//! The data **read path is `&self`** end to end: `EmucxlContext::read`,
+//! `read_at`, `is_local`, `get_numa_node`, `get_size`, `stats` and
+//! `now_ns` all take shared references. Underneath, the virtual clock is
+//! a single atomic (48.16 fixed-point, CAS-free `fetch_add`), telemetry
+//! uses atomic counters with short per-class histogram mutexes, the
+//! device shards its page storage behind per-node `RwLock`s, and the CXL
+//! controller model takes a brief write lock only for its queue-estimate
+//! updates. `EmucxlContext` is therefore `Send + Sync`: wrap it in an
+//! `Arc<RwLock<_>>` and any number of threads may read concurrently under
+//! the *read* lock, while alloc/free/write/migrate keep exclusive `&mut`
+//! semantics under the write lock.
+//!
+//! The pool coordinator ([`coordinator::server`]) builds on this with
+//! three split locks — tenants, ctx, kv — acquired in exactly that order
+//! (**tenants → ctx → kv**); see its module docs for the per-request
+//! locking discipline. Single-threaded callers observe the exact same
+//! virtual-time accounting as before the clock became atomic, which is
+//! what keeps the sequence/xla-parity tests deterministic.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

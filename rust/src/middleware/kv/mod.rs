@@ -12,4 +12,4 @@ pub mod store;
 
 pub use lru::LruList;
 pub use policy::GetPolicy;
-pub use store::{KvStats, KvStore};
+pub use store::{KvStats, KvStore, SharedGet};

@@ -46,6 +46,17 @@ impl Entry {
     }
 }
 
+/// Outcome of a GET attempted through the shared (read-locked) path.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SharedGet {
+    /// GET completed without needing to move data.
+    Done(Option<Vec<u8>>),
+    /// This GET would promote the object to local memory; the caller must
+    /// retry via [`KvStore::get`] under an exclusive context lock. Nothing
+    /// was recorded — the retry counts the access exactly once.
+    NeedsExclusive,
+}
+
 /// Operation counters (Table IV's % local is `local_hits / gets`).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct KvStats {
@@ -202,7 +213,7 @@ impl KvStore {
         Ok(())
     }
 
-    fn read_value(ctx: &mut EmucxlContext, e: &Entry) -> Result<Vec<u8>> {
+    fn read_value(ctx: &EmucxlContext, e: &Entry) -> Result<Vec<u8>> {
         let mut buf = vec![0u8; e.val_len];
         ctx.read_at(e.addr, HDR + e.key_len, &mut buf)?;
         Ok(buf)
@@ -350,6 +361,79 @@ impl KvStore {
                     let token = self.index.get(key).unwrap().token;
                     self.remote_lru.move_to_front(token);
                 }
+                let e = self.index.get(key).unwrap();
+                Ok(Some(Self::read_value(ctx, e)?))
+            }
+        }
+    }
+
+    /// Listing 3 GET through the coordinator's *shared* read path.
+    ///
+    /// The caller holds only a read lock on the context, so this variant
+    /// never migrates. If the hit would trigger a promotion under the
+    /// store's policy, it returns [`SharedGet::NeedsExclusive`] **without
+    /// recording anything** (no stats, no access_count bump, no LRU
+    /// movement) so the caller can re-run the full [`KvStore::get`] under
+    /// an exclusive context lock with no double counting.
+    pub fn get_shared(&mut self, ctx: &EmucxlContext, key: &[u8]) -> Result<SharedGet> {
+        // Peek first: would this GET promote? (access_count + 1 is what
+        // get_impl would see after its bump.)
+        if let Some(e) = self.index.get(key) {
+            if e.tier == Tier::Remote && self.policy.promote_on_get(e.access_count + 1) {
+                return Ok(SharedGet::NeedsExclusive);
+            }
+        }
+        let _op = obs::enter_op();
+        let r = self.get_shared_impl(ctx, key);
+        self.obs.gets.inc();
+        self.obs.sync_objects(self.local_lru.len(), self.remote_lru.len());
+        let bytes = match &r {
+            Ok(Some(v)) => v.len() as u64,
+            _ => 0,
+        };
+        obs::record(
+            Subsystem::Kv,
+            "get",
+            ctx.now_ns(),
+            key.len() as u64,
+            bytes,
+            0.0,
+            r.is_ok(),
+        );
+        r.map(SharedGet::Done)
+    }
+
+    /// `get_impl` minus the promotion arm (ruled out by the peek above).
+    fn get_shared_impl(&mut self, ctx: &EmucxlContext, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.stats.gets += 1;
+        let tier = match self.index.get_mut(key) {
+            Some(e) => {
+                e.access_count += 1;
+                e.tier
+            }
+            None => {
+                self.stats.misses += 1;
+                self.obs.misses.inc();
+                return Ok(None);
+            }
+        };
+        match tier {
+            Tier::Local => {
+                self.stats.local_hits += 1;
+                self.obs.local_hits.inc();
+                let e = self.index.get(key).unwrap();
+                let token = e.token;
+                let value = Self::read_value(ctx, e)?;
+                if self.refresh_on_get {
+                    self.local_lru.move_to_front(token);
+                }
+                Ok(Some(value))
+            }
+            Tier::Remote => {
+                self.stats.remote_hits += 1;
+                self.obs.remote_hits.inc();
+                let token = self.index.get(key).unwrap().token;
+                self.remote_lru.move_to_front(token);
                 let e = self.index.get(key).unwrap();
                 Ok(Some(Self::read_value(ctx, e)?))
             }
@@ -567,6 +651,39 @@ mod tests {
         kv.get(&mut c, b"a").unwrap();
         assert_eq!(kv.tier_of(b"a"), Some("local"));
         assert_eq!(kv.stats().promotions, 1);
+    }
+
+    #[test]
+    fn shared_get_reads_without_promotion() {
+        let mut c = ctx();
+        let mut kv = store(1, GetPolicy::InPlace);
+        kv.put(&mut c, b"a", b"1").unwrap();
+        kv.put(&mut c, b"b", b"2").unwrap(); // "a" -> remote
+        // InPlace never promotes, so the shared path completes both tiers.
+        assert_eq!(kv.get_shared(&c, b"b").unwrap(), SharedGet::Done(Some(b"2".to_vec())));
+        assert_eq!(kv.get_shared(&c, b"a").unwrap(), SharedGet::Done(Some(b"1".to_vec())));
+        assert_eq!(kv.get_shared(&c, b"nope").unwrap(), SharedGet::Done(None));
+        assert_eq!(kv.tier_of(b"a"), Some("remote"));
+        let s = kv.stats();
+        assert_eq!((s.gets, s.local_hits, s.remote_hits, s.misses), (3, 1, 1, 1));
+    }
+
+    #[test]
+    fn shared_get_defers_promotion_without_double_count() {
+        let mut c = ctx();
+        let mut kv = store(1, GetPolicy::Promote);
+        kv.put(&mut c, b"a", b"1").unwrap();
+        kv.put(&mut c, b"b", b"2").unwrap(); // "a" -> remote
+        // Promote policy: remote hit must bounce to the exclusive path
+        // with zero state change.
+        assert_eq!(kv.get_shared(&c, b"a").unwrap(), SharedGet::NeedsExclusive);
+        assert_eq!(kv.stats().gets, 0);
+        assert_eq!(kv.tier_of(b"a"), Some("remote"));
+        // The exclusive retry counts the access exactly once and promotes.
+        assert_eq!(kv.get(&mut c, b"a").unwrap(), Some(b"1".to_vec()));
+        assert_eq!(kv.tier_of(b"a"), Some("local"));
+        let s = kv.stats();
+        assert_eq!((s.gets, s.remote_hits, s.promotions), (1, 1, 1));
     }
 
     #[test]

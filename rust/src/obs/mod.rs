@@ -23,17 +23,18 @@ pub mod metrics;
 pub mod recorder;
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Once, OnceLock};
 
 pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry, BUCKET_BOUNDS};
 pub use recorder::{FlightRecorder, Subsystem, TraceEvent};
 
-/// Events the flight recorder retains.
+/// Default number of events the flight recorder retains.
 pub const RECORDER_CAPACITY: usize = 8192;
 
 static METRICS: OnceLock<MetricsRegistry> = OnceLock::new();
 static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+static RECORDER_CAP: AtomicUsize = AtomicUsize::new(RECORDER_CAPACITY);
 static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
 
 /// The process-wide metrics registry.
@@ -41,9 +42,20 @@ pub fn metrics() -> &'static MetricsRegistry {
     METRICS.get_or_init(MetricsRegistry::new)
 }
 
-/// The process-wide flight recorder.
+/// The process-wide flight recorder. Sized on first use from the value set
+/// by [`set_recorder_capacity`] (default [`RECORDER_CAPACITY`]).
 pub fn recorder() -> &'static FlightRecorder {
-    RECORDER.get_or_init(|| FlightRecorder::new(RECORDER_CAPACITY))
+    RECORDER.get_or_init(|| FlightRecorder::new(RECORDER_CAP.load(Ordering::SeqCst)))
+}
+
+/// Override the flight-recorder ring capacity. Best-effort: the ring is
+/// sized once, at first use, so this only takes effect when called before
+/// any event is recorded (e.g. from `PoolConfig.recorder_capacity` at
+/// server start). Returns whether the override can still apply.
+pub fn set_recorder_capacity(capacity: usize) -> bool {
+    let unset = RECORDER.get().is_none();
+    RECORDER_CAP.store(capacity.max(1), Ordering::SeqCst);
+    unset
 }
 
 fn next_span_id() -> u64 {

@@ -2,6 +2,14 @@
 //!
 //! Tracks what `emucxl_stats` reports plus the latency distributions the
 //! benches print (Table III's mean/σ are computed from these).
+//!
+//! Counters are atomics and the histograms sit behind short per-class
+//! mutexes, so [`Telemetry::record`] works through `&self` — this is what
+//! lets `TimingEngine::record` (and in turn the whole read path) run
+//! concurrently from many threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::timing::desc::{AccessDesc, Op};
 use crate::util::hist::LatencyHistogram;
@@ -41,12 +49,12 @@ impl AccessClass {
     }
 }
 
-/// Aggregated emulator telemetry.
+/// Aggregated emulator telemetry. Thread-safe: recording takes `&self`.
 #[derive(Debug, Default)]
 pub struct Telemetry {
-    hists: [LatencyHistogram; 5],
-    bytes: [u64; 5],
-    ops: [u64; 5],
+    hists: [Mutex<LatencyHistogram>; 5],
+    bytes: [AtomicU64; 5],
+    ops: [AtomicU64; 5],
 }
 
 impl Telemetry {
@@ -61,39 +69,40 @@ impl Telemetry {
         class as usize
     }
 
-    pub fn record(&mut self, desc: &AccessDesc, latency_ns: f32) {
+    pub fn record(&self, desc: &AccessDesc, latency_ns: f32) {
         let i = Self::idx(AccessClass::of(desc));
-        self.hists[i].record(latency_ns.max(0.0) as u64);
-        self.bytes[i] += desc.bytes;
-        self.ops[i] += 1;
+        self.hists[i].lock().unwrap().record(latency_ns.max(0.0) as u64);
+        self.bytes[i].fetch_add(desc.bytes, Ordering::Relaxed);
+        self.ops[i].fetch_add(1, Ordering::Relaxed);
     }
 
-    pub fn hist(&self, class: AccessClass) -> &LatencyHistogram {
-        &self.hists[Self::idx(class)]
+    /// Snapshot of one class's latency histogram.
+    pub fn hist(&self, class: AccessClass) -> LatencyHistogram {
+        self.hists[Self::idx(class)].lock().unwrap().clone()
     }
 
     pub fn ops(&self, class: AccessClass) -> u64 {
-        self.ops[Self::idx(class)]
+        self.ops[Self::idx(class)].load(Ordering::Relaxed)
     }
 
     pub fn bytes(&self, class: AccessClass) -> u64 {
-        self.bytes[Self::idx(class)]
+        self.bytes[Self::idx(class)].load(Ordering::Relaxed)
     }
 
     pub fn total_ops(&self) -> u64 {
-        self.ops.iter().sum()
+        self.ops.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
     /// Total virtual ns attributed to each class.
     pub fn total_ns(&self) -> u128 {
-        self.hists.iter().map(|h| h.sum()).sum()
+        self.hists.iter().map(|h| h.lock().unwrap().sum()).sum()
     }
 
     pub fn merge(&mut self, other: &Telemetry) {
         for i in 0..5 {
-            self.hists[i].merge(&other.hists[i]);
-            self.bytes[i] += other.bytes[i];
-            self.ops[i] += other.ops[i];
+            self.hists[i].get_mut().unwrap().merge(&other.hists[i].lock().unwrap());
+            *self.bytes[i].get_mut() += other.bytes[i].load(Ordering::Relaxed);
+            *self.ops[i].get_mut() += other.ops[i].load(Ordering::Relaxed);
         }
     }
 
@@ -102,15 +111,16 @@ impl Telemetry {
         let mut s = String::new();
         for &c in &AccessClass::ALL {
             let i = Self::idx(c);
-            if self.ops[i] == 0 {
+            let ops = self.ops[i].load(Ordering::Relaxed);
+            if ops == 0 {
                 continue;
             }
             s.push_str(&format!(
                 "{:<12} ops={:<9} bytes={:<12} {}\n",
                 c.name(),
-                self.ops[i],
-                self.bytes[i],
-                self.hists[i].report()
+                ops,
+                self.bytes[i].load(Ordering::Relaxed),
+                self.hists[i].lock().unwrap().report()
             ));
         }
         if s.is_empty() {
@@ -144,7 +154,7 @@ mod tests {
 
     #[test]
     fn record_accumulates() {
-        let mut t = Telemetry::new();
+        let t = Telemetry::new();
         t.record(&AccessDesc::read(1, 4096), 300.0);
         t.record(&AccessDesc::read(1, 4096), 500.0);
         assert_eq!(t.ops(AccessClass::RemoteRead), 2);
@@ -155,9 +165,31 @@ mod tests {
     }
 
     #[test]
+    fn record_is_shared_across_threads() {
+        use std::sync::Arc;
+        let t = Arc::new(Telemetry::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let t = Arc::clone(&t);
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        t.record(&AccessDesc::read(1, 64), 250.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(t.ops(AccessClass::RemoteRead), 2000);
+        assert_eq!(t.bytes(AccessClass::RemoteRead), 2000 * 64);
+        assert_eq!(t.hist(AccessClass::RemoteRead).count(), 2000);
+    }
+
+    #[test]
     fn merge_combines_classes() {
         let mut a = Telemetry::new();
-        let mut b = Telemetry::new();
+        let b = Telemetry::new();
         a.record(&AccessDesc::read(0, 10), 80.0);
         b.record(&AccessDesc::write(1, 20), 250.0);
         a.merge(&b);
@@ -167,7 +199,7 @@ mod tests {
 
     #[test]
     fn report_skips_empty_classes() {
-        let mut t = Telemetry::new();
+        let t = Telemetry::new();
         t.record(&AccessDesc::read(0, 1), 80.0);
         let r = t.report();
         assert!(r.contains("local_read"));

@@ -3,14 +3,30 @@
 //! Latencies computed by the timing model advance *virtual* time, not wall
 //! time — the emulator never sleeps. This is what makes the reproduction's
 //! Table III deterministic where the paper's depends on host hardware.
+//!
+//! The clock is a single atomic so concurrent readers (the coordinator's
+//! shared read path) can price accesses and read `now_ns` without any lock.
+//! Time is stored as 48.16 fixed point: the low [`FRAC_BITS`] bits hold
+//! fractional nanoseconds, so f32 latencies don't lose sub-ns parts when
+//! accumulated one access at a time. One `fetch_add` both advances the
+//! clock and accumulates the fraction; for a single-threaded caller the
+//! result is identical to the old sequential accumulation (the fixed-point
+//! quantization error is < 2^-16 ns per advance), which keeps virtual-time
+//! determinism for the existing sequence/parity tests.
 
-/// Monotonic virtual clock with nanosecond resolution. Fractional
-/// nanoseconds are accumulated so f32 latencies don't lose sub-ns parts.
-#[derive(Debug, Clone, Default)]
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fractional bits of the fixed-point representation.
+const FRAC_BITS: u32 = 16;
+/// One nanosecond in fixed-point units.
+const UNIT: f64 = (1u64 << FRAC_BITS) as f64;
+
+/// Monotonic virtual clock with nanosecond resolution, advanced atomically.
+#[derive(Debug, Default)]
 pub struct VirtualClock {
-    now_ns: u64,
-    frac: f64,
-    advances: u64,
+    /// Virtual time in 48.16 fixed-point nanoseconds.
+    units: AtomicU64,
+    advances: AtomicU64,
 }
 
 impl VirtualClock {
@@ -21,24 +37,23 @@ impl VirtualClock {
     /// Current virtual time in ns.
     #[inline]
     pub fn now_ns(&self) -> u64 {
-        self.now_ns
+        self.units.load(Ordering::Acquire) >> FRAC_BITS
     }
 
-    /// Advance by a (possibly fractional) latency; returns new now.
+    /// Advance by a (possibly fractional) latency; returns the new now.
+    /// Lock-free: safe to call from any number of threads concurrently.
     #[inline]
-    pub fn advance(&mut self, ns: f64) -> u64 {
+    pub fn advance(&self, ns: f64) -> u64 {
         debug_assert!(ns >= 0.0, "negative latency {ns}");
-        self.frac += ns;
-        let whole = self.frac as u64;
-        self.now_ns += whole;
-        self.frac -= whole as f64;
-        self.advances += 1;
-        self.now_ns
+        let delta = (ns.max(0.0) * UNIT).round() as u64;
+        let after = self.units.fetch_add(delta, Ordering::AcqRel) + delta;
+        self.advances.fetch_add(1, Ordering::Relaxed);
+        after >> FRAC_BITS
     }
 
     /// Number of advance() calls (≈ accesses priced).
     pub fn advances(&self) -> u64 {
-        self.advances
+        self.advances.load(Ordering::Relaxed)
     }
 }
 
@@ -48,7 +63,7 @@ mod tests {
 
     #[test]
     fn accumulates_fractions() {
-        let mut c = VirtualClock::new();
+        let c = VirtualClock::new();
         for _ in 0..10 {
             c.advance(0.25);
         }
@@ -59,7 +74,7 @@ mod tests {
 
     #[test]
     fn whole_ns_advance() {
-        let mut c = VirtualClock::new();
+        let c = VirtualClock::new();
         assert_eq!(c.advance(100.0), 100);
         assert_eq!(c.advance(54.0), 154);
         assert_eq!(c.advances(), 2);
@@ -67,8 +82,29 @@ mod tests {
 
     #[test]
     fn zero_advance_is_fine() {
-        let mut c = VirtualClock::new();
+        let c = VirtualClock::new();
         c.advance(0.0);
         assert_eq!(c.now_ns(), 0);
+    }
+
+    #[test]
+    fn concurrent_advances_all_land() {
+        use std::sync::Arc;
+        let c = Arc::new(VirtualClock::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        c.advance(1.5);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.now_ns(), 6000); // 4000 * 1.5 with no lost updates
+        assert_eq!(c.advances(), 4000);
     }
 }

@@ -12,6 +12,14 @@
 //!
 //! The two paths implement the same f32 arithmetic; `rust/tests/` assert
 //! their parity through the real artifact.
+//!
+//! [`TimingEngine::record`] takes `&self`: the clock is an atomic and the
+//! telemetry counters are thread-safe, so any number of readers can price
+//! accesses concurrently. The clock lives in an `Arc` so lock-free
+//! `now_ns` handles ([`TimingEngine::clock_handle`]) can be shared with
+//! the coordinator.
+
+use std::sync::{Arc, Mutex};
 
 use crate::error::Result;
 use crate::runtime::exec::LatencyBatchExec;
@@ -36,12 +44,11 @@ pub enum EngineMode {
 /// SAFETY of the `Send` impl: the `xla` crate leaves its PJRT wrappers
 /// `!Send` because they hold raw pointers and an `Rc`-based client handle.
 /// The executable here is (a) owned exclusively by one `TimingEngine`,
-/// (b) only reachable through `&TimingEngine` methods that the coordinator
-/// serializes behind a `Mutex`, and (c) never cloned — so at any instant at
-/// most one thread touches the underlying handles, which is the same
-/// discipline as moving a single-threaded object between threads. The PJRT
-/// CPU plugin itself is internally synchronized per the PJRT C API
-/// contract.
+/// (b) only reachable through the engine's own `Mutex` (see the `exec`
+/// field), and (c) never cloned — so at any instant at most one thread
+/// touches the underlying handles, which is the same discipline as moving
+/// a single-threaded object between threads. The PJRT CPU plugin itself is
+/// internally synchronized per the PJRT C API contract.
 struct ExecCell(Option<LatencyBatchExec>);
 
 unsafe impl Send for ExecCell {}
@@ -49,10 +56,12 @@ unsafe impl Send for ExecCell {}
 /// Prices accesses and accumulates virtual time + telemetry.
 pub struct TimingEngine {
     params: TimingParams,
-    clock: VirtualClock,
+    clock: Arc<VirtualClock>,
     telemetry: Telemetry,
     mode: EngineMode,
-    exec: ExecCell,
+    /// Serializes access to the PJRT executable; also what makes the
+    /// engine `Sync` despite the `!Sync` PJRT handles.
+    exec: Mutex<ExecCell>,
 }
 
 impl std::fmt::Debug for TimingEngine {
@@ -69,10 +78,10 @@ impl TimingEngine {
     pub fn native(params: TimingParams) -> Self {
         Self {
             params,
-            clock: VirtualClock::new(),
+            clock: Arc::new(VirtualClock::new()),
             telemetry: Telemetry::new(),
             mode: EngineMode::Native,
-            exec: ExecCell(None),
+            exec: Mutex::new(ExecCell(None)),
         }
     }
 
@@ -80,10 +89,10 @@ impl TimingEngine {
     pub fn with_xla(params: TimingParams, runtime: &XlaRuntime) -> Result<Self> {
         Ok(Self {
             params,
-            clock: VirtualClock::new(),
+            clock: Arc::new(VirtualClock::new()),
             telemetry: Telemetry::new(),
             mode: EngineMode::Xla,
-            exec: ExecCell(Some(runtime.latency_batch()?)),
+            exec: Mutex::new(ExecCell(Some(runtime.latency_batch()?))),
         })
     }
 
@@ -100,7 +109,13 @@ impl TimingEngine {
     }
 
     pub fn clock(&self) -> &VirtualClock {
-        &self.clock
+        self.clock.as_ref()
+    }
+
+    /// Shared handle to the virtual clock: lock-free `now_ns` for callers
+    /// (e.g. the coordinator) that must not take any pool lock.
+    pub fn clock_handle(&self) -> Arc<VirtualClock> {
+        Arc::clone(&self.clock)
     }
 
     pub fn telemetry(&self) -> &Telemetry {
@@ -109,7 +124,7 @@ impl TimingEngine {
 
     /// Artifact batch size when the XLA path is loaded.
     pub fn xla_batch(&self) -> Option<usize> {
-        self.exec.0.as_ref().map(|e| e.batch())
+        self.exec.lock().unwrap().0.as_ref().map(|e| e.batch())
     }
 
     /// Price one access without recording it.
@@ -119,9 +134,9 @@ impl TimingEngine {
     }
 
     /// Price and record one access: advances the virtual clock and
-    /// telemetry. Returns the latency in ns.
+    /// telemetry. Returns the latency in ns. Thread-safe (`&self`).
     #[inline]
-    pub fn record(&mut self, desc: &AccessDesc) -> f32 {
+    pub fn record(&self, desc: &AccessDesc) -> f32 {
         let ns = self.params.latency_ns(desc);
         self.clock.advance(ns as f64);
         self.telemetry.record(desc, ns);
@@ -131,7 +146,8 @@ impl TimingEngine {
     /// Price a batch WITHOUT recording. XLA path when loaded (chunked to
     /// the artifact batch size), else native.
     pub fn price_batch(&self, descs: &[AccessDesc]) -> Result<Vec<f32>> {
-        match (&self.exec.0, self.mode) {
+        let cell = self.exec.lock().unwrap();
+        match (&cell.0, self.mode) {
             (Some(exec), EngineMode::Xla) => {
                 let mut out = Vec::with_capacity(descs.len());
                 for chunk in descs.chunks(exec.batch()) {
@@ -146,7 +162,7 @@ impl TimingEngine {
     /// Price and record a batch; clock advances by the batch's total
     /// latency (accesses in a batch are serialized onto the virtual
     /// timeline in submission order).
-    pub fn record_batch(&mut self, descs: &[AccessDesc]) -> Result<Vec<f32>> {
+    pub fn record_batch(&self, descs: &[AccessDesc]) -> Result<Vec<f32>> {
         let lats = self.price_batch(descs)?;
         for (d, &ns) in descs.iter().zip(&lats) {
             self.clock.advance(ns as f64);
@@ -158,7 +174,8 @@ impl TimingEngine {
     /// Max |native - xla| over a batch — the parity diagnostic surfaced by
     /// `emucxl selftest` and asserted by integration tests.
     pub fn cross_check(&self, descs: &[AccessDesc]) -> Result<f32> {
-        let exec = match &self.exec.0 {
+        let cell = self.exec.lock().unwrap();
+        let exec = match &cell.0 {
             Some(e) => e,
             None => return Ok(0.0),
         };
@@ -183,7 +200,7 @@ mod tests {
 
     #[test]
     fn record_advances_clock_and_telemetry() {
-        let mut e = TimingEngine::native(TimingParams::default());
+        let e = TimingEngine::native(TimingParams::default());
         let ns = e.record(&AccessDesc::read(1, 64));
         assert!((ns - 254.0).abs() < 1e-3);
         assert_eq!(e.clock().now_ns(), 254);
@@ -192,7 +209,7 @@ mod tests {
 
     #[test]
     fn native_batch_matches_scalar() {
-        let mut e = TimingEngine::native(TimingParams::default());
+        let e = TimingEngine::native(TimingParams::default());
         let descs = vec![AccessDesc::read(0, 64), AccessDesc::write(1, 4096)];
         let lats = e.record_batch(&descs).unwrap();
         assert_eq!(lats.len(), 2);
@@ -214,6 +231,30 @@ mod tests {
         let _ = e.price(&AccessDesc::read(0, 64));
         assert_eq!(e.clock().now_ns(), 0);
         assert_eq!(e.telemetry().total_ops(), 0);
+    }
+
+    #[test]
+    fn concurrent_records_are_not_lost() {
+        let e = Arc::new(TimingEngine::native(TimingParams::default()));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let e = Arc::clone(&e);
+                std::thread::spawn(move || {
+                    for _ in 0..250 {
+                        e.record(&AccessDesc::read(1, 64));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(e.telemetry().ops(AccessClass::RemoteRead), 1000);
+        assert_eq!(e.clock().advances(), 1000);
+        // 1000 sequential advances land within rounding of 1000x one advance
+        let one = e.price(&AccessDesc::read(1, 64)) as f64;
+        let total = e.clock().now_ns() as f64;
+        assert!((total - one * 1000.0).abs() < 1000.0, "{total} vs {}", one * 1000.0);
     }
 
     #[test]

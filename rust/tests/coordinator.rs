@@ -16,6 +16,7 @@ fn server() -> PoolServer {
         batch: 16,
         max_wait: Duration::from_micros(100),
         trace_dump: None,
+        recorder_capacity: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }

@@ -1,0 +1,197 @@
+//! Concurrency stress/soak tests for the split-lock pool coordinator.
+//!
+//! These exercise the `&self` read path end to end: many client threads
+//! mixing reads, writes, migrates and KV ops against one server, asserting
+//! no deadlock (the suite finishing IS the assertion), correct data, and
+//! monotone virtual time. The tenant-isolation and length-validation
+//! regression tests for the coordinator live here too.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use emucxl::config::EmucxlConfig;
+use emucxl::coordinator::client::PoolClient;
+use emucxl::coordinator::server::{PoolConfig, PoolServer};
+use emucxl::middleware::kv::GetPolicy;
+
+fn server() -> PoolServer {
+    let cfg = PoolConfig {
+        emucxl: EmucxlConfig::sized(32 << 20, 128 << 20),
+        kv_local_capacity: 8,
+        kv_policy: GetPolicy::Promote,
+        batch: 16,
+        max_wait: Duration::from_micros(100),
+        trace_dump: None,
+        // Exercise the PoolConfig knob and keep the soak test's ring small.
+        recorder_capacity: Some(1024),
+    };
+    PoolServer::start(cfg, 0).expect("start server")
+}
+
+/// ≥8 tenants hammering a mixed workload. Every thread verifies its own
+/// data; the main thread polls virtual time for monotonicity while the
+/// workload runs.
+#[test]
+fn eight_tenants_mixed_ops_no_deadlock() {
+    const TENANTS: u32 = 8;
+    const ITERS: u32 = 200;
+
+    let srv = server();
+    let addr = srv.addr();
+    let failed = Arc::new(AtomicBool::new(false));
+
+    let handles: Vec<_> = (0..TENANTS)
+        .map(|t| {
+            let failed = Arc::clone(&failed);
+            std::thread::spawn(move || {
+                let run = || -> emucxl::Result<()> {
+                    let mut c = PoolClient::connect(addr, 4 << 20)?;
+                    let (mut base, _) = c.alloc(4096, t % 2)?;
+                    let tag = vec![t as u8 + 1; 64];
+                    c.write(base, &tag)?;
+                    for i in 0..ITERS {
+                        match i % 5 {
+                            0 | 1 => {
+                                // Reads dominate — this is the shared path.
+                                let (data, _) = c.read(base, 64)?;
+                                assert_eq!(data, tag, "tenant {t} read corrupt data");
+                            }
+                            2 => {
+                                c.write(base, &tag)?;
+                            }
+                            3 => {
+                                let key = format!("t{t}-k{}", i % 7);
+                                c.kv_put(key.as_bytes(), &tag)?;
+                                let (v, _) = c.kv_get(key.as_bytes())?;
+                                assert_eq!(v.as_deref(), Some(tag.as_slice()));
+                            }
+                            _ => {
+                                // Migrate bounces the allocation between
+                                // nodes; the address may change.
+                                let (new_base, _) = c.migrate(base, (t + i) % 2)?;
+                                base = new_base;
+                                let (data, _) = c.read(base, 64)?;
+                                assert_eq!(data, tag, "tenant {t} lost data in migrate");
+                            }
+                        }
+                    }
+                    c.bye()
+                };
+                if let Err(e) = run() {
+                    eprintln!("tenant {t} failed: {e}");
+                    failed.store(true, Ordering::SeqCst);
+                }
+            })
+        })
+        .collect();
+
+    // Virtual time must be monotone while the pool is under fire.
+    let mut last = srv.now_ns();
+    while !handles.iter().all(|h| h.is_finished()) {
+        let now = srv.now_ns();
+        assert!(now >= last, "virtual time went backwards: {last} -> {now}");
+        last = now;
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(!failed.load(Ordering::SeqCst), "a tenant thread failed");
+    assert!(srv.now_ns() > 0, "workload advanced virtual time");
+}
+
+/// Regression: `Read`/`Write` must enforce `tenant.owns(addr)` like
+/// `Free`/`Migrate` do — a tenant must not read or corrupt another
+/// tenant's allocations, including through interior pointers.
+#[test]
+fn tenants_cannot_read_or_write_each_others_memory() {
+    let srv = server();
+    let mut alice = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let mut bob = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+
+    let (addr, _) = alice.alloc(4096, 0).unwrap();
+    alice.write(addr, b"secret").unwrap();
+
+    let denied = bob.read(addr, 6).unwrap_err();
+    assert!(denied.to_string().contains("not mapped"), "got: {denied}");
+    let denied = bob.write(addr, b"OWNED!").unwrap_err();
+    assert!(denied.to_string().contains("not mapped"), "got: {denied}");
+    // Interior pointers are resolved to the containing allocation first.
+    let denied = bob.read(addr + 100, 1).unwrap_err();
+    assert!(denied.to_string().contains("not mapped"), "got: {denied}");
+
+    // Alice is unaffected and her data intact.
+    let (data, _) = alice.read(addr, 6).unwrap();
+    assert_eq!(&data, b"secret");
+
+    alice.bye().unwrap();
+    bob.bye().unwrap();
+}
+
+/// Regression: a client-controlled `len` must be validated against the
+/// allocation's registered size BEFORE the reply buffer is allocated — a
+/// bogus frame must not be able to OOM the daemon.
+#[test]
+fn oversized_read_len_is_rejected_before_allocation() {
+    let srv = server();
+    let mut c = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let (addr, _) = c.alloc(4096, 0).unwrap();
+
+    let e = c.read(addr, u32::MAX).unwrap_err();
+    assert!(e.to_string().contains("exceeds"), "got: {e}");
+    // One byte past the end, via an interior pointer.
+    let e = c.read(addr + 4095, 2).unwrap_err();
+    assert!(e.to_string().contains("exceeds"), "got: {e}");
+
+    // The connection is still healthy after rejected requests.
+    let (data, _) = c.read(addr, 16).unwrap();
+    assert_eq!(data.len(), 16);
+    c.bye().unwrap();
+}
+
+/// Concurrent readers make progress while another tenant migrates the
+/// whole time — the writer cannot starve or deadlock the read path.
+#[test]
+fn readers_progress_while_migrator_churns() {
+    const READERS: u32 = 4;
+    let srv = server();
+    let addr = srv.addr();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let readers: Vec<_> = (0..READERS)
+        .map(|t| {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || -> u64 {
+                let mut c = PoolClient::connect(addr, 1 << 20).unwrap();
+                let (base, _) = c.alloc(4096, 0).unwrap();
+                c.write(base, &[t as u8; 32]).unwrap();
+                let mut reads = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let (data, _) = c.read(base, 32).unwrap();
+                    assert!(data.iter().all(|&b| b == t as u8));
+                    reads += 1;
+                }
+                c.bye().unwrap();
+                reads
+            })
+        })
+        .collect();
+
+    let migrator = std::thread::spawn(move || {
+        let mut c = PoolClient::connect(addr, 4 << 20).unwrap();
+        let (mut base, _) = c.alloc(64 << 10, 0).unwrap();
+        for i in 0..60u32 {
+            let (new_base, _) = c.migrate(base, (i + 1) % 2).unwrap();
+            base = new_base;
+        }
+        c.bye().unwrap();
+    });
+
+    migrator.join().unwrap();
+    stop.store(true, Ordering::SeqCst);
+    for r in readers {
+        let reads = r.join().unwrap();
+        assert!(reads > 0, "every reader made progress during migration");
+    }
+}

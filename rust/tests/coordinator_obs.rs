@@ -23,6 +23,7 @@ fn server() -> PoolServer {
         batch: 4,
         max_wait: Duration::from_micros(100),
         trace_dump: None,
+        recorder_capacity: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }
@@ -186,6 +187,7 @@ fn shutdown_writes_trace_dump_file() {
         batch: 4,
         max_wait: Duration::from_micros(100),
         trace_dump: Some(path.clone()),
+        recorder_capacity: None,
     };
     let mut srv = PoolServer::start(cfg, 0).expect("start server");
     let mut client = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
