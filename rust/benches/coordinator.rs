@@ -29,6 +29,7 @@ fn run_scale(tenants: usize, artifacts: Option<std::path::PathBuf>) -> (f64, f64
         max_wait: Duration::from_micros(200),
         trace_dump: None,
         recorder_capacity: None,
+        metrics_listen: None,
     };
     let srv = PoolServer::start(cfg, 0).unwrap();
     let addr = srv.addr();

@@ -97,12 +97,14 @@ impl ApiObs {
 
     /// Record one API call: outcome counter, latency histogram (ok calls
     /// only — errors don't advance the virtual clock meaningfully) and a
-    /// flight-recorder event stamped with the active span.
+    /// flight-recorder event stamped with the active span. The span id
+    /// also rides on the histogram bucket as an OpenMetrics exemplar, so
+    /// a scraped latency outlier resolves to its trace events.
     fn record(&self, op: usize, t0_ns: u64, now_ns: u64, arg: u64, bytes: u64, ok: bool) {
         let lat = now_ns.saturating_sub(t0_ns);
         if ok {
             self.ok[op].inc();
-            self.lat[op].observe(lat);
+            self.lat[op].observe_with_exemplar(lat, obs::current().0);
         } else {
             self.err[op].inc();
         }

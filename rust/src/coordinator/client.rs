@@ -1,12 +1,20 @@
 //! Blocking client for the pool coordinator — the library a tenant process
 //! links against. One method per wire request; `Error` responses map back
 //! onto [`EmucxlError::Protocol`] (quota errors keep their message).
+//!
+//! Besides the tenant client, this module hosts the scrape bridge
+//! ([`start_stats_bridge`]): an HTTP observability plane that proxies
+//! `/metrics`, `/trace` and `/healthz` over the wire protocol to an
+//! already-running daemon, so stock Prometheus can scrape a pool that was
+//! started without `--metrics-listen` — no restart needed.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
 
 use crate::coordinator::proto::{read_frame, write_frame, Request, Response};
 use crate::error::{EmucxlError, Result};
+use crate::obs::http::{ObsHttpServer, ObsSource};
 
 /// A connected tenant.
 pub struct PoolClient {
@@ -36,6 +44,18 @@ impl PoolClient {
             }
             other => Err(EmucxlError::Protocol(format!("expected Welcome, got {other:?}"))),
         }
+    }
+
+    /// Connect WITHOUT registering as a tenant. Only the observability
+    /// requests (`metrics`, `trace_dump`, `bye`) are valid on such a
+    /// connection — the coordinator allows them before `Hello`. Scrape
+    /// paths use this so each scrape doesn't churn the tenant table.
+    pub fn connect_scraper(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        Ok(Self { reader, writer, tenant: 0 })
     }
 
     pub fn tenant_id(&self) -> u32 {
@@ -161,6 +181,52 @@ impl PoolClient {
 
 fn unexpected(r: Response) -> EmucxlError {
     EmucxlError::Protocol(format!("unexpected response {r:?}"))
+}
+
+/// Proxies each HTTP request over a fresh wire connection to the daemon.
+/// Per-scrape connections keep the bridge stateless: a daemon restart
+/// doesn't wedge it, and `healthy` truthfully reports reachability.
+struct BridgeSource {
+    daemon: SocketAddr,
+}
+
+impl ObsSource for BridgeSource {
+    fn metrics(&self) -> std::result::Result<String, String> {
+        let mut c = PoolClient::connect_scraper(self.daemon).map_err(|e| e.to_string())?;
+        let body = c.metrics().map_err(|e| e.to_string())?;
+        let _ = c.bye();
+        Ok(body)
+    }
+
+    fn trace(&self, max: usize, span: Option<u64>) -> std::result::Result<String, String> {
+        let wire_max = u32::try_from(max).unwrap_or(0); // 0 = all, wire-side
+        let mut c = PoolClient::connect_scraper(self.daemon).map_err(|e| e.to_string())?;
+        let dump = c.trace_dump(wire_max).map_err(|e| e.to_string())?;
+        let _ = c.bye();
+        Ok(match span {
+            // The wire protocol has no span filter; apply it on the JSONL.
+            Some(s) => {
+                let needle = format!("\"span\":{s},");
+                dump.lines()
+                    .filter(|l| l.contains(&needle))
+                    .map(|l| format!("{l}\n"))
+                    .collect()
+            }
+            None => dump,
+        })
+    }
+
+    fn healthy(&self) -> bool {
+        PoolClient::connect_scraper(self.daemon).is_ok()
+    }
+}
+
+/// `emucxl stats --listen`: serve the HTTP observability plane on
+/// `127.0.0.1:port` (0 = ephemeral), proxying every request over the wire
+/// protocol to the daemon at `daemon`. Returns the running server; it
+/// stops when dropped.
+pub fn start_stats_bridge(daemon: SocketAddr, port: u16) -> Result<ObsHttpServer> {
+    Ok(ObsHttpServer::start(port, Arc::new(BridgeSource { daemon }))?)
 }
 
 #[cfg(test)]

@@ -33,6 +33,12 @@
 //! Latency pricing is pushed OUT of every lock onto the dynamic
 //! [`TimingBatcher`], which batches concurrent tenants' descriptors into
 //! single XLA artifact executions.
+//!
+//! With [`PoolConfig::metrics_listen`] set, an [`ObsHttpServer`] runs
+//! alongside the wire listener, serving `GET /metrics`, `/trace` and
+//! `/healthz` to stock HTTP scrapers; it reads only the process-global
+//! registry/recorder plus the tenants lock and atomic clock, so scrapes
+//! never contend with the ctx data path.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -49,6 +55,7 @@ use crate::coordinator::tenant::TenantTable;
 use crate::error::{EmucxlError, Result};
 use crate::mem::vaspace::VAddr;
 use crate::middleware::kv::{GetPolicy, KvStore, SharedGet};
+use crate::obs::http::{ObsHttpServer, ObsSource};
 use crate::obs::{self, Subsystem};
 use crate::timing::clock::VirtualClock;
 use crate::timing::desc::AccessDesc;
@@ -70,6 +77,11 @@ pub struct PoolConfig {
     /// the ring is sized at first use, so this only applies when the
     /// server starts before anything else records a trace event.
     pub recorder_capacity: Option<usize>,
+    /// Serve the HTTP observability plane (`GET /metrics`, `/trace`,
+    /// `/healthz`) on `127.0.0.1:port` (0 = ephemeral, resolved via
+    /// [`PoolServer::metrics_addr`]). `None` keeps observability
+    /// wire-protocol-only.
+    pub metrics_listen: Option<u16>,
 }
 
 impl Default for PoolConfig {
@@ -82,6 +94,7 @@ impl Default for PoolConfig {
             max_wait: Duration::from_micros(200),
             trace_dump: None,
             recorder_capacity: None,
+            metrics_listen: None,
         }
     }
 }
@@ -99,12 +112,38 @@ struct SharedPool {
     stop: AtomicBool,
 }
 
+/// Serves the pool's registry and recorder over HTTP: refreshes the
+/// point-in-time pool gauges on every `/metrics` scrape (exactly like the
+/// wire `Request::Metrics` path) and reports healthy until shutdown.
+struct PoolObsSource {
+    shared: Arc<SharedPool>,
+}
+
+impl ObsSource for PoolObsSource {
+    fn metrics(&self) -> std::result::Result<String, String> {
+        refresh_pool_gauges(&self.shared);
+        Ok(obs::metrics().render())
+    }
+
+    fn trace(&self, max: usize, span: Option<u64>) -> std::result::Result<String, String> {
+        Ok(match span {
+            Some(s) => obs::recorder().dump_jsonl_span(s, max),
+            None => obs::recorder().dump_jsonl(max),
+        })
+    }
+
+    fn healthy(&self) -> bool {
+        !self.shared.stop.load(Ordering::SeqCst)
+    }
+}
+
 /// Running coordinator handle; shuts down on [`PoolServer::shutdown`] or drop.
 pub struct PoolServer {
     addr: SocketAddr,
     shared: Arc<SharedPool>,
     accept: Option<std::thread::JoinHandle<()>>,
     trace_dump: Option<PathBuf>,
+    http: Option<ObsHttpServer>,
 }
 
 impl PoolServer {
@@ -146,12 +185,25 @@ impl PoolServer {
             .name("emucxl-accept".into())
             .spawn(move || accept_loop(listener, s2))
             .expect("spawn accept loop");
-        Ok(Self { addr, shared, accept: Some(accept), trace_dump: config.trace_dump })
+        let http = match config.metrics_listen {
+            Some(port) => Some(ObsHttpServer::start(
+                port,
+                Arc::new(PoolObsSource { shared: Arc::clone(&shared) }),
+            )?),
+            None => None,
+        };
+        Ok(Self { addr, shared, accept: Some(accept), trace_dump: config.trace_dump, http })
     }
 
     /// Address clients should connect to.
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Address of the HTTP observability plane, when one was configured
+    /// via [`PoolConfig::metrics_listen`].
+    pub fn metrics_addr(&self) -> Option<SocketAddr> {
+        self.http.as_ref().map(|h| h.addr())
     }
 
     /// Number of connected tenants.
@@ -179,6 +231,9 @@ impl PoolServer {
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.accept.take() {
             let _ = h.join();
+        }
+        if let Some(http) = &mut self.http {
+            http.shutdown();
         }
         let ts = self.shared.clock.now_ns();
         obs::record(Subsystem::Coordinator, "shutdown", ts, 0, 0, 0.0, true);
@@ -229,6 +284,41 @@ fn err_resp(e: &EmucxlError) -> Response {
     Response::Error { msg: e.to_string() }
 }
 
+/// Bucket bounds of `emucxl_coordinator_request_wall_ns`. Request handling
+/// wall time sits in the µs-to-ms range, so the registry-default
+/// powers-of-four grid (16 ns – 17 s) wastes most of its resolution;
+/// powers of two from 1 µs to 32 ms, plus a 1 s outlier bucket.
+const WALL_BOUNDS: [u64; 17] = [
+    1_000,
+    2_000,
+    4_000,
+    8_000,
+    16_000,
+    32_000,
+    64_000,
+    128_000,
+    256_000,
+    512_000,
+    1_024_000,
+    2_048_000,
+    4_096_000,
+    8_192_000,
+    16_384_000,
+    32_768_000,
+    1_000_000_000,
+];
+
+/// Refresh the point-in-time pool gauges the scrape paths report. No ctx
+/// lock: tenant count comes from the tenants table, virtual time from the
+/// atomic clock.
+fn refresh_pool_gauges(shared: &SharedPool) {
+    let m = obs::metrics();
+    m.gauge("emucxl_coordinator_tenants", "currently registered tenants", &[])
+        .set(shared.tenants.lock().unwrap().len() as i64);
+    m.gauge("emucxl_pool_virtual_time_ns", "virtual time of the shared pool", &[])
+        .set(shared.clock.now_ns().min(i64::MAX as u64) as i64);
+}
+
 fn op_name(req: &Request) -> &'static str {
     match req {
         Request::Hello { .. } => "hello",
@@ -268,12 +358,15 @@ fn record_request(
     )
     .inc();
     let wall_ns = wall0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
-    m.histogram(
+    // The request span doubles as the bucket's OpenMetrics exemplar, so a
+    // latency outlier in a scrape resolves to its /trace events.
+    m.histogram_with_bounds(
         "emucxl_coordinator_request_wall_ns",
         "wall-clock request handling latency",
         &[("op", op)],
+        &WALL_BOUNDS,
     )
-    .observe(wall_ns);
+    .observe_with_exemplar(wall_ns, obs::current().0);
 
     if let Some(id) = tenant_id {
         let tenant = id.to_string();
@@ -427,15 +520,8 @@ fn handle_request(
             Response::Welcome { tenant: id }
         }
         Request::Metrics => {
-            // Refresh point-in-time pool gauges, then render. No ctx lock:
-            // tenant count comes from the tenants table, virtual time from
-            // the atomic clock.
-            let m = obs::metrics();
-            m.gauge("emucxl_coordinator_tenants", "currently registered tenants", &[])
-                .set(shared.tenants.lock().unwrap().len() as i64);
-            m.gauge("emucxl_pool_virtual_time_ns", "virtual time of the shared pool", &[])
-                .set(shared.clock.now_ns().min(i64::MAX as u64) as i64);
-            Response::Text { body: m.render() }
+            refresh_pool_gauges(shared);
+            Response::Text { body: obs::metrics().render() }
         }
         Request::TraceDump { max } => {
             let max = if max == 0 { usize::MAX } else { max as usize };

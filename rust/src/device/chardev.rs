@@ -29,7 +29,7 @@ use crate::mem::arena::NodeArena;
 use crate::mem::pagetable::PageTable;
 use crate::mem::pages_for;
 use crate::mem::vaspace::{VAddr, VaSpace};
-use crate::obs::{self, Counter, Gauge, Subsystem};
+use crate::obs::{self, Counter, FloatGauge, Gauge, Subsystem};
 use crate::topology::{MemoryKind, NumaTopology};
 
 /// A device file descriptor.
@@ -67,6 +67,10 @@ struct DevObs {
     mem_read_bytes: Arc<Counter>,
     mem_write_bytes: Arc<Counter>,
     link_queue_depth: Arc<Gauge>,
+    /// Per-node link utilization in [0, 1], indexed by node id. Derived
+    /// from the controller's window occupancy (size-weighted), not queue
+    /// depth; stays 0 for nodes the CXL link never services (local DDR).
+    link_utilization: Vec<Arc<FloatGauge>>,
     va_maps: Arc<Counter>,
     va_unmaps: Arc<Counter>,
     /// Per-node arena occupancy, indexed by node id.
@@ -77,6 +81,7 @@ impl DevObs {
     fn new(arenas: &[NodeArena], topology: &NumaTopology) -> Self {
         let m = obs::metrics();
         let mut arena_used = Vec::with_capacity(arenas.len());
+        let mut link_utilization = Vec::with_capacity(arenas.len());
         for node in topology.nodes() {
             let label = node.id.to_string();
             m.gauge(
@@ -88,6 +93,11 @@ impl DevObs {
             arena_used.push(m.gauge(
                 "emucxl_mem_arena_used_bytes",
                 "per-node arena bytes currently allocated",
+                &[("node", &label)],
+            ));
+            link_utilization.push(m.float_gauge(
+                "emucxl_link_utilization",
+                "CXL link utilization in [0,1] from the window model's flit occupancy",
                 &[("node", &label)],
             ));
         }
@@ -132,6 +142,7 @@ impl DevObs {
                 "CXL link outstanding-request estimate at the last access",
                 &[],
             ),
+            link_utilization,
             va_maps: m.counter(
                 "emucxl_mem_vaspace_ops_total",
                 "virtual-address-space operations",
@@ -209,10 +220,21 @@ impl EmucxlDevice {
         self.controller.read().unwrap()
     }
 
-    /// Drain the controller's queue estimate up to `now_ns` (short write
-    /// lock; called by the timing layer before pricing each access).
+    /// Drain the controller's queue and occupancy estimates up to `now_ns`
+    /// (short write lock; called by the timing layer before pricing each
+    /// access), then refresh the per-node utilization gauges so a scrape
+    /// between accesses sees the drained value, not the last burst's peak.
     pub fn drain_controller(&self, now_ns: u64) {
-        self.controller.write().unwrap().advance_to(now_ns);
+        let utilization = {
+            let mut ctrl = self.controller.write().unwrap();
+            ctrl.advance_to(now_ns);
+            ctrl.utilization()
+        };
+        for node in self.topology.nodes() {
+            if node.kind == MemoryKind::CxlMem {
+                self.obs.link_utilization[node.id as usize].set(utilization);
+            }
+        }
     }
 
     /// `open("/dev/emucxl")` — a CXL.io configuration operation.
@@ -327,6 +349,7 @@ impl EmucxlDevice {
                 let mut ctrl = self.controller.write().unwrap();
                 qdepth = ctrl.record_mem(is_write, bytes);
                 self.obs.link_queue_depth.set(ctrl.queue_depth() as i64);
+                self.obs.link_utilization[node as usize].set(ctrl.utilization());
             }
             let (ops, byte_ctr) = if is_write {
                 (&self.obs.mem_writes, &self.obs.mem_write_bytes)
@@ -601,6 +624,22 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(d.controller().mem_reads.ops, 400);
+    }
+
+    #[test]
+    fn link_utilization_gauge_follows_remote_traffic() {
+        let mut d = dev();
+        let fd = d.open();
+        let m = d.mmap(fd, 64 << 10, 1).unwrap();
+        d.write(m.addr, &vec![7u8; 64 << 10]).unwrap();
+        assert!(d.controller().utilization() > 0.0, "remote write raises occupancy");
+        // The registry is process-global and other tests poke the same
+        // gauge concurrently, so only assert the series exists.
+        let text = obs::metrics().render();
+        assert!(text.contains("emucxl_link_utilization{node=\"1\"}"), "{text}");
+        // Draining far into the future returns utilization to zero.
+        d.drain_controller(u64::MAX / 2);
+        assert_eq!(d.controller().utilization(), 0.0);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! advances, so bursts raise the observed queue depth exactly the way a
 //! real link's MSHR/queue occupancy would.
 
-use crate::device::link::CxlLink;
+use crate::device::link::{CxlLink, FLIT_BYTES};
 
 /// CXL protocol classes (CXL.cache is out of scope, as in the paper §II).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +46,15 @@ pub struct CxlController {
     drain_per_ns: f64,
     /// Cap on the queue estimate (device queue capacity).
     max_queue: f64,
+    /// Window occupancy in flits: each access adds its flit count, the
+    /// link retires flits at its payload bandwidth as time advances.
+    /// Unlike `inflight` (request count), this weighs accesses by size,
+    /// so it is the utilization signal — a few large copies saturate the
+    /// link the same way many small reads do.
+    occ_flits: f64,
+    /// Cap on the occupancy window (matches the timing window model's
+    /// `max_occ_flits` default).
+    max_occ_flits: f64,
 }
 
 impl CxlController {
@@ -61,6 +70,8 @@ impl CxlController {
             // the order of a CXL memory expander's random-access rate.
             drain_per_ns: 1.0 / 20.0,
             max_queue: 256.0,
+            occ_flits: 0.0,
+            max_occ_flits: 4096.0,
         }
     }
 
@@ -75,11 +86,15 @@ impl CxlController {
         self.last_drain_ns
     }
 
-    /// Drain the in-flight estimate up to virtual time `now_ns`.
+    /// Drain the in-flight and occupancy estimates up to virtual time
+    /// `now_ns`.
     pub fn advance_to(&mut self, now_ns: u64) {
         if now_ns > self.last_drain_ns {
             let dt = (now_ns - self.last_drain_ns) as f64;
             self.inflight = (self.inflight - dt * self.drain_per_ns).max(0.0);
+            // The link retires payload at its physical rate: flits per ns.
+            let flits_per_ns = self.link.bytes_per_ns() / FLIT_BYTES as f64;
+            self.occ_flits = (self.occ_flits - dt * flits_per_ns).max(0.0);
             self.last_drain_ns = now_ns;
         }
     }
@@ -100,6 +115,7 @@ impl CxlController {
         c.bytes += bytes as u64;
         c.flits += flits;
         self.inflight = (self.inflight + 1.0).min(self.max_queue);
+        self.occ_flits = (self.occ_flits + flits as f64).min(self.max_occ_flits);
         seen
     }
 
@@ -109,7 +125,21 @@ impl CxlController {
         self.io_ops.ops += 1;
         self.io_ops.flits += 1;
         self.inflight = (self.inflight + 1.0).min(self.max_queue);
+        self.occ_flits = (self.occ_flits + 1.0).min(self.max_occ_flits);
         seen
+    }
+
+    /// Current window occupancy in flits.
+    pub fn occupancy_flits(&self) -> f64 {
+        self.occ_flits
+    }
+
+    /// Link utilization in `[0, 1]`: window occupancy over its cap. This
+    /// is the size-weighted signal the `emucxl_link_utilization` gauge
+    /// exports — 1.0 means the occupancy window is saturated (the link
+    /// has `max_occ_flits` of payload queued against its bandwidth).
+    pub fn utilization(&self) -> f64 {
+        (self.occ_flits / self.max_occ_flits).clamp(0.0, 1.0)
     }
 
     /// Total flits that crossed the link (both protocols, both directions).
@@ -209,6 +239,42 @@ mod tests {
         // time moving backwards is ignored
         c.advance_to(400);
         assert_eq!(c.queue_depth(), q2);
+    }
+
+    #[test]
+    fn utilization_tracks_occupancy_and_drains() {
+        let mut c = CxlController::default();
+        assert_eq!(c.utilization(), 0.0);
+        // 1024 flits of payload into a 4096-flit window: 25% utilized.
+        c.record_mem(true, 1024 * 64);
+        assert_eq!(c.occupancy_flits(), 1024.0);
+        assert!((c.utilization() - 0.25).abs() < 1e-9, "{}", c.utilization());
+        // Gen5 x16 retires 0.5 flits/ns; 2048 ns clears 1024 flits.
+        c.advance_to(2_048);
+        assert_eq!(c.occupancy_flits(), 0.0);
+        assert_eq!(c.utilization(), 0.0);
+    }
+
+    #[test]
+    fn utilization_saturates_at_one() {
+        let mut c = CxlController::default();
+        for _ in 0..100 {
+            c.record_mem(false, 1 << 20);
+        }
+        assert_eq!(c.utilization(), 1.0);
+        assert_eq!(c.occupancy_flits(), 4096.0);
+    }
+
+    #[test]
+    fn occupancy_weighs_access_size_where_queue_depth_does_not() {
+        let mut small = CxlController::default();
+        let mut large = CxlController::default();
+        small.record_mem(false, 64);
+        large.record_mem(false, 64 * 64);
+        // one request each — identical queue depth...
+        assert_eq!(small.queue_depth(), large.queue_depth());
+        // ...but 64x the payload: utilization sees the difference.
+        assert!(large.utilization() > small.utilization() * 32.0);
     }
 
     #[test]

@@ -33,6 +33,19 @@
 //! JSONL event dump) in another; the same data is available over the wire
 //! via `coordinator::proto::Request::{Metrics, TraceDump}`.
 //!
+//! For stock HTTP tooling there is a zero-dependency scrape plane
+//! ([`obs::http`]): `emucxl serve --metrics-listen PORT` serves
+//! `GET /metrics` (Prometheus text with OpenMetrics exemplars linking
+//! histogram buckets to flight-recorder span ids), `GET /trace`
+//! (JSONL, `?max=N&span=N`) and `GET /healthz` on `127.0.0.1`. Histogram
+//! bucket bounds are per-metric (`MetricsRegistry::histogram_with_bounds`),
+//! and the device layer exports per-node `emucxl_link_utilization` gauges
+//! derived from the window model's flit occupancy. A daemon started
+//! without the flag can still be scraped through the bridge:
+//! `emucxl stats --listen PORT` proxies the same endpoints over the wire
+//! protocol. See `docs/observability.md` for the endpoint reference and a
+//! sample Prometheus scrape config.
+//!
 //! ## Concurrency
 //!
 //! The data **read path is `&self`** end to end: `EmucxlContext::read`,

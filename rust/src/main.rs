@@ -8,8 +8,9 @@
 //! emucxl table3 [--ops N --trials T]  paper Table III (queue)
 //! emucxl table4 [--gets N]            paper Table IV (KV policies)
 //! emucxl serve [--port P] [--artifacts DIR] [--trace-dump FILE] [--no-warmup]
+//!              [--metrics-listen PORT]
 //!                                     pool coordinator daemon
-//! emucxl stats [--host H --port P] [--raw] [--trace N]
+//! emucxl stats [--host H --port P] [--raw] [--trace N] [--listen PORT]
 //!                                     metrics/trace of a running daemon
 //! emucxl replay --trace FILE [--artifacts DIR] trace through window model
 //! emucxl calibrate --local NS --remote NS [--artifacts DIR]
@@ -169,12 +170,19 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(path) = flags.get("trace-dump") {
         cfg.trace_dump = Some(path.into());
     }
+    if let Some(v) = flags.get("metrics-listen") {
+        // bare `--metrics-listen` picks the conventional scrape port
+        cfg.metrics_listen = Some(v.parse().unwrap_or(9184));
+    }
     if !flags.contains_key("no-warmup") {
         warmup()?;
     }
     let port = get(flags, "port", 7117u16);
     let server = PoolServer::start(cfg, port)?;
     println!("emucxl pool coordinator listening on {}", server.addr());
+    if let Some(http) = server.metrics_addr() {
+        println!("observability plane on http://{http}/metrics (also /trace, /healthz)");
+    }
     println!("press Ctrl+C to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -187,6 +195,21 @@ fn cmd_stats(flags: &HashMap<String, String>) -> Result<()> {
     let addr: std::net::SocketAddr = format!("{host}:{port}").parse().map_err(|_| {
         emucxl::error::EmucxlError::InvalidArgument(format!("bad --host {host}"))
     })?;
+    if let Some(v) = flags.get("listen") {
+        // Bridge mode: scrape endpoint for a daemon started without
+        // --metrics-listen. Proxies /metrics, /trace and /healthz over
+        // the wire protocol; runs until killed.
+        let http_port = v.parse().unwrap_or(9184);
+        let bridge = emucxl::coordinator::client::start_stats_bridge(addr, http_port)?;
+        println!(
+            "scrape bridge for {addr} on http://{}/metrics (also /trace, /healthz)",
+            bridge.addr()
+        );
+        println!("press Ctrl+C to stop");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
     let mut client = PoolClient::connect(addr, 1 << 20)?;
     let text = client.metrics()?;
     if flags.contains_key("raw") {
@@ -305,6 +328,9 @@ fn pretty_metrics(text: &str) -> String {
                 fams.entry(name.to_string()).or_default().kind = kind.to_string();
             }
         } else if !line.is_empty() && !line.starts_with('#') {
+            // Bucket lines may carry an OpenMetrics exemplar suffix
+            // (` # {span_id="N"} value`); strip it before value parsing.
+            let line = line.split_once(" # ").map(|(l, _)| l).unwrap_or(line);
             let (key, val) = match line.rsplit_once(' ') {
                 Some(x) => x,
                 None => continue,
@@ -472,9 +498,12 @@ commands:
   table3 [--ops N --trials T]   paper Table III (queue)
   table4 [--gets N]             paper Table IV (KV policies)
   serve [--port P] [--artifacts DIR] [--trace-dump FILE] [--no-warmup]
-                                pool coordinator daemon
-  stats [--host H --port P] [--raw] [--trace N]
-                                metrics/trace of a running daemon
+        [--metrics-listen PORT]
+                                pool coordinator daemon; --metrics-listen
+                                serves /metrics, /trace, /healthz over HTTP
+  stats [--host H --port P] [--raw] [--trace N] [--listen PORT]
+                                metrics/trace of a running daemon;
+                                --listen runs a persistent scrape bridge
   replay --trace FILE [--artifacts DIR]
                                 trace through the window model
   calibrate --local NS --remote NS [--artifacts DIR]

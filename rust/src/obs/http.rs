@@ -1,0 +1,356 @@
+//! Zero-dependency HTTP/1.1 observability plane.
+//!
+//! A small threaded server that lets stock Prometheus / Grafana / `curl`
+//! scrape a running pool without speaking the custom wire protocol:
+//!
+//! * `GET /metrics`  — Prometheus text exposition (with OpenMetrics
+//!   exemplars on histogram bucket lines).
+//! * `GET /trace`    — flight-recorder JSONL; `?max=N` caps the number of
+//!   events (0 or absent = all held), `?span=N` filters to one span.
+//! * `GET /healthz`  — `200 ok` while the backing source is healthy,
+//!   `503` otherwise.
+//!
+//! The server is deliberately minimal: `GET`/`HEAD` only, one request per
+//! connection (`Connection: close`), bound to `127.0.0.1`. What it serves
+//! comes from an [`ObsSource`], so the same server fronts the in-process
+//! registry ([`LocalSource`]), a live coordinator (which refreshes pool
+//! gauges before rendering), or a wire-protocol proxy to a remote daemon
+//! (`coordinator::client::start_stats_bridge`).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::obs;
+
+/// Maximum bytes of request line + headers a client may send.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// How long a handler waits on a slow client before giving up.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// What the HTTP plane serves. `Err` strings become `502 Bad Gateway`
+/// bodies, so a proxying source can surface "daemon unreachable" to the
+/// scraper instead of dying.
+pub trait ObsSource: Send + Sync {
+    /// Body for `GET /metrics`. May refresh point-in-time gauges first.
+    fn metrics(&self) -> Result<String, String>;
+
+    /// Body for `GET /trace`: newest-`max` events as JSONL, optionally
+    /// filtered to one span id.
+    fn trace(&self, max: usize, span: Option<u64>) -> Result<String, String>;
+
+    /// Truth behind `GET /healthz`.
+    fn healthy(&self) -> bool {
+        true
+    }
+}
+
+/// Serves the process-global metrics registry and flight recorder.
+#[derive(Debug, Default)]
+pub struct LocalSource;
+
+impl ObsSource for LocalSource {
+    fn metrics(&self) -> Result<String, String> {
+        Ok(obs::metrics().render())
+    }
+
+    fn trace(&self, max: usize, span: Option<u64>) -> Result<String, String> {
+        Ok(match span {
+            Some(s) => obs::recorder().dump_jsonl_span(s, max),
+            None => obs::recorder().dump_jsonl(max),
+        })
+    }
+}
+
+/// The threaded HTTP server. One accept-loop thread, one short-lived
+/// thread per connection (scrape traffic is a handful of requests per
+/// interval, not a flood). Shuts down on drop.
+pub struct ObsHttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl ObsHttpServer {
+    /// Bind `127.0.0.1:port` (0 = ephemeral) and start serving `source`.
+    pub fn start(port: u16, source: Arc<dyn ObsSource>) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::Builder::new()
+            .name("emucxl-obs-http".into())
+            .spawn(move || accept_loop(listener, source, stop2))
+            .expect("spawn obs http accept thread");
+        Ok(Self { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the port when started with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop. Idempotent.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop the same way the coordinator does.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ObsHttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, source: Arc<dyn ObsSource>, stop: Arc<AtomicBool>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        handlers.retain(|h| !h.is_finished());
+        let source = Arc::clone(&source);
+        let h = std::thread::Builder::new()
+            .name("emucxl-obs-conn".into())
+            .spawn(move || {
+                let _ = serve_connection(stream, source);
+            })
+            .expect("spawn obs http handler thread");
+        handlers.push(h);
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// Parse one request, route it, write one response, close.
+fn serve_connection(stream: TcpStream, source: Arc<dyn ObsSource>) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(CLIENT_TIMEOUT)).ok();
+    stream.set_write_timeout(Some(CLIENT_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    // Drain (and bound) the header block; we don't interpret any of it.
+    let mut head_bytes = request_line.len();
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line)?;
+        head_bytes += n;
+        if n == 0 || line == "\r\n" || line == "\n" {
+            break;
+        }
+        if head_bytes > MAX_HEAD_BYTES {
+            return respond(&mut writer, "431 Request Header Fields Too Large", "", "", false);
+        }
+    }
+
+    let mut parts = request_line.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next()) {
+        (Some(m), Some(t)) => (m, t),
+        _ => return respond(&mut writer, "400 Bad Request", "", "bad request\n", false),
+    };
+    let head_only = method == "HEAD";
+    if method != "GET" && !head_only {
+        return respond(
+            &mut writer,
+            "405 Method Not Allowed",
+            "Allow: GET, HEAD\r\n",
+            "method not allowed\n",
+            false,
+        );
+    }
+
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, Some(q)),
+        None => (target, None),
+    };
+    let text_plain = "Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n";
+    match path {
+        "/healthz" => {
+            if source.healthy() {
+                respond(&mut writer, "200 OK", text_plain, "ok\n", head_only)
+            } else {
+                let status = "503 Service Unavailable";
+                respond(&mut writer, status, text_plain, "unhealthy\n", head_only)
+            }
+        }
+        "/metrics" => match source.metrics() {
+            Ok(body) => respond(&mut writer, "200 OK", text_plain, &body, head_only),
+            Err(e) => {
+                respond(&mut writer, "502 Bad Gateway", text_plain, &format!("{e}\n"), head_only)
+            }
+        },
+        "/trace" => {
+            let max = match query_u64(query, "max") {
+                None | Some(0) => usize::MAX,
+                Some(n) => n as usize,
+            };
+            let span = query_u64(query, "span");
+            match source.trace(max, span) {
+                Ok(body) => respond(
+                    &mut writer,
+                    "200 OK",
+                    "Content-Type: application/x-ndjson\r\n",
+                    &body,
+                    head_only,
+                ),
+                Err(e) => respond(
+                    &mut writer,
+                    "502 Bad Gateway",
+                    text_plain,
+                    &format!("{e}\n"),
+                    head_only,
+                ),
+            }
+        }
+        "/" => respond(
+            &mut writer,
+            "200 OK",
+            text_plain,
+            "emucxl observability plane\n/metrics  /trace[?max=N&span=N]  /healthz\n",
+            head_only,
+        ),
+        _ => respond(&mut writer, "404 Not Found", text_plain, "not found\n", head_only),
+    }
+}
+
+/// First `key=<u64>` pair in the query string, if any.
+fn query_u64(query: Option<&str>, key: &str) -> Option<u64> {
+    query?.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=')?;
+        if k == key {
+            v.parse().ok()
+        } else {
+            None
+        }
+    })
+}
+
+fn respond(
+    w: &mut TcpStream,
+    status: &str,
+    extra_headers: &str,
+    body: &str,
+    head_only: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status}\r\n{extra_headers}Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    w.write_all(head.as_bytes())?;
+    if !head_only {
+        w.write_all(body.as_bytes())?;
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    struct CannedSource {
+        healthy: bool,
+    }
+
+    impl ObsSource for CannedSource {
+        fn metrics(&self) -> Result<String, String> {
+            Ok("# TYPE canned counter\ncanned 1\n".into())
+        }
+
+        fn trace(&self, max: usize, span: Option<u64>) -> Result<String, String> {
+            Ok(format!("{{\"max\":{max},\"span\":{}}}\n", span.unwrap_or(0)))
+        }
+
+        fn healthy(&self) -> bool {
+            self.healthy
+        }
+    }
+
+    fn get(addr: SocketAddr, target: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {target} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (head, body) = buf.split_once("\r\n\r\n").expect("head/body split");
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn routes_metrics_trace_and_healthz() {
+        let mut srv = ObsHttpServer::start(0, Arc::new(CannedSource { healthy: true })).unwrap();
+        let addr = srv.addr();
+
+        let (head, body) = get(addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert!(head.contains("Content-Type: text/plain; version=0.0.4"), "{head}");
+        assert_eq!(body, "# TYPE canned counter\ncanned 1\n");
+
+        let (head, body) = get(addr, "/trace?max=7&span=3");
+        assert!(head.contains("application/x-ndjson"), "{head}");
+        assert_eq!(body, "{\"max\":7,\"span\":3}\n");
+
+        // absent / zero max means "all held events"
+        let (_, body) = get(addr, "/trace?max=0");
+        assert_eq!(body, format!("{{\"max\":{},\"span\":0}}\n", usize::MAX));
+
+        let (head, body) = get(addr, "/healthz");
+        assert!(head.starts_with("HTTP/1.1 200 OK"), "{head}");
+        assert_eq!(body, "ok\n");
+
+        let (head, _) = get(addr, "/nope");
+        assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unhealthy_source_is_503_and_post_is_405() {
+        let mut srv = ObsHttpServer::start(0, Arc::new(CannedSource { healthy: false })).unwrap();
+        let addr = srv.addr();
+
+        let (head, body) = get(addr, "/healthz");
+        assert!(head.starts_with("HTTP/1.1 503"), "{head}");
+        assert_eq!(body, "unhealthy\n");
+
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "POST /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 405"), "{buf}");
+        assert!(buf.contains("Allow: GET, HEAD"), "{buf}");
+
+        srv.shutdown();
+    }
+
+    #[test]
+    fn head_request_omits_the_body() {
+        let mut srv = ObsHttpServer::start(0, Arc::new(CannedSource { healthy: true })).unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        write!(s, "HEAD /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (head, body) = buf.split_once("\r\n\r\n").unwrap();
+        assert!(head.contains("Content-Length: 3"), "{head}");
+        assert!(body.is_empty(), "HEAD must not carry a body");
+        srv.shutdown();
+    }
+}

@@ -6,11 +6,17 @@
 //! the instrumented object; (2) exposition output is deterministic —
 //! families are kept in a `BTreeMap` and series are sorted by label set at
 //! render time; (3) std-only.
+//!
+//! Histograms carry OpenMetrics *exemplars*: [`Histogram::observe_with_exemplar`]
+//! attaches the flight-recorder span id of a sampled observation to the
+//! bucket the value fell in, and `render` appends it to that bucket line as
+//! `... # {span_id="N"} value`. A scraped p99 outlier therefore links
+//! directly to its trace in the `/trace` JSONL dump.
 
 use std::collections::{BTreeMap, HashMap};
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 /// Monotonically increasing counter.
 #[derive(Debug, Default)]
@@ -57,8 +63,27 @@ impl Gauge {
     }
 }
 
-/// Upper bounds of the histogram buckets (exclusive of `+Inf`): powers of
-/// four starting at 16. Sized for nanosecond latencies — 16 ns up to ~17 s.
+/// Gauge holding an `f64`, bit-cast into an atomic word. For ratios —
+/// e.g. link utilization in `[0, 1]` — where integer resolution is too
+/// coarse.
+#[derive(Debug, Default)]
+pub struct FloatGauge(AtomicU64);
+
+impl FloatGauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Default upper bounds of histogram buckets (exclusive of `+Inf`): powers
+/// of four starting at 16. Sized for nanosecond latencies — 16 ns up to
+/// ~17 s. Histograms whose value range is known more precisely should
+/// register tighter bounds via [`MetricsRegistry::histogram_with_bounds`].
 pub const BUCKET_BOUNDS: [u64; 16] = [
     16,
     64,
@@ -78,33 +103,85 @@ pub const BUCKET_BOUNDS: [u64; 16] = [
     17_179_869_184,
 ];
 
-/// Fixed-bucket histogram (cumulative exposition, `le` label).
+/// One sampled observation attached to a histogram bucket, linking the
+/// metric back to the flight-recorder span that produced it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Exemplar {
+    /// The observed value (same unit as the histogram).
+    pub value: u64,
+    /// Flight-recorder span id of the operation that observed it.
+    pub span: u64,
+}
+
+/// Fixed-bucket histogram (cumulative exposition, `le` label) with
+/// per-bucket exemplar slots. Bounds are fixed at construction; the
+/// default is [`BUCKET_BOUNDS`].
 #[derive(Debug)]
 pub struct Histogram {
-    buckets: [AtomicU64; BUCKET_BOUNDS.len()],
+    bounds: Box<[u64]>,
+    buckets: Box<[AtomicU64]>,
     sum: AtomicU64,
     count: AtomicU64,
+    /// One slot per bucket plus the implicit `+Inf` bucket. Latest-wins
+    /// and lossy: writers use `try_lock` so the hot path never blocks on
+    /// a concurrent scrape.
+    exemplars: Box<[Mutex<Option<Exemplar>>]>,
 }
 
 impl Default for Histogram {
     fn default() -> Self {
-        Self {
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            sum: AtomicU64::new(0),
-            count: AtomicU64::new(0),
-        }
+        Self::with_bounds(&BUCKET_BOUNDS)
     }
 }
 
 impl Histogram {
+    /// A histogram over the given strictly increasing bucket bounds
+    /// (exclusive of the implicit `+Inf` bucket).
+    pub fn with_bounds(bounds: &[u64]) -> Self {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "bucket bounds must be strictly increasing: {bounds:?}"
+        );
+        Self {
+            bounds: bounds.into(),
+            buckets: bounds.iter().map(|_| AtomicU64::new(0)).collect(),
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            exemplars: (0..=bounds.len()).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Index of the bucket `v` falls in; `bounds.len()` is `+Inf`.
+    fn bucket_index(&self, v: u64) -> usize {
+        self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len())
+    }
+
     #[inline]
     pub fn observe(&self, v: u64) {
-        if let Some(i) = BUCKET_BOUNDS.iter().position(|&b| v <= b) {
+        let i = self.bucket_index(v);
+        if i < self.buckets.len() {
             self.buckets[i].fetch_add(1, Ordering::Relaxed);
         }
         // values above the last bound only land in the implicit +Inf bucket
         self.sum.fetch_add(v, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observe `v` and attach `span` as the bucket's exemplar. Latest
+    /// observation wins; the slot is taken with `try_lock`, so under
+    /// contention with a concurrent render the exemplar is silently
+    /// dropped rather than stalling the caller. Span id 0 (no active
+    /// span) records no exemplar.
+    #[inline]
+    pub fn observe_with_exemplar(&self, v: u64, span: u64) {
+        self.observe(v);
+        if span == 0 {
+            return;
+        }
+        if let Ok(mut slot) = self.exemplars[self.bucket_index(v)].try_lock() {
+            *slot = Some(Exemplar { value: v, span });
+        }
     }
 
     pub fn count(&self) -> u64 {
@@ -115,9 +192,19 @@ impl Histogram {
         self.sum.load(Ordering::Relaxed)
     }
 
-    /// Per-bucket (non-cumulative) counts, in `BUCKET_BOUNDS` order.
-    pub fn bucket_counts(&self) -> [u64; BUCKET_BOUNDS.len()] {
-        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    /// The bucket upper bounds this histogram was registered with.
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts, in bounds order.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// The exemplar of bucket `i` (`bounds().len()` addresses `+Inf`).
+    pub fn exemplar(&self, i: usize) -> Option<Exemplar> {
+        *self.exemplars[i].lock().unwrap()
     }
 }
 
@@ -126,6 +213,7 @@ impl Histogram {
 enum Slot {
     C(Arc<Counter>),
     G(Arc<Gauge>),
+    F(Arc<FloatGauge>),
     H(Arc<Histogram>),
 }
 
@@ -187,6 +275,14 @@ fn render_labels(key: &[(String, String)]) -> String {
     format!("{{{}}}", inner.join(","))
 }
 
+/// ` # {span_id="N"} value` suffix for a bucket line, or "".
+fn render_exemplar(e: Option<Exemplar>) -> String {
+    match e {
+        Some(e) => format!(" # {{span_id=\"{}\"}} {}", e.span, e.value),
+        None => String::new(),
+    }
+}
+
 impl MetricsRegistry {
     pub fn new() -> Self {
         Self::default()
@@ -215,11 +311,7 @@ impl MetricsRegistry {
             kind,
             series: HashMap::new(),
         });
-        assert_eq!(
-            fam.kind, kind,
-            "metric {name} registered as {} and {kind}",
-            fam.kind
-        );
+        assert_eq!(fam.kind, kind, "metric {name} registered as {} and {kind}", fam.kind);
         fam.series.entry(key).or_insert_with(make).clone()
     }
 
@@ -227,7 +319,7 @@ impl MetricsRegistry {
     pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
         match self.slot(name, help, "counter", labels, || Slot::C(Arc::default())) {
             Slot::C(c) => c,
-            _ => unreachable!("kind mismatch is caught in slot()"),
+            _ => panic!("metric {name} already registered as a different kind"),
         }
     }
 
@@ -235,20 +327,49 @@ impl MetricsRegistry {
     pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
         match self.slot(name, help, "gauge", labels, || Slot::G(Arc::default())) {
             Slot::G(g) => g,
-            _ => unreachable!("kind mismatch is caught in slot()"),
+            _ => panic!("metric {name} already registered as a different kind"),
         }
     }
 
-    /// Get or register a histogram series.
-    pub fn histogram(
+    /// Get or register a float-valued gauge series (rendered as `gauge`).
+    pub fn float_gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<FloatGauge> {
+        match self.slot(name, help, "gauge", labels, || Slot::F(Arc::default())) {
+            Slot::F(g) => g,
+            _ => panic!("metric {name} already registered as a different kind"),
+        }
+    }
+
+    /// Get or register a histogram series with the default [`BUCKET_BOUNDS`].
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        match self.slot(name, help, "histogram", labels, || Slot::H(Arc::default())) {
+            Slot::H(h) => h,
+            _ => panic!("metric {name} already registered as a different kind"),
+        }
+    }
+
+    /// Get or register a histogram series with explicit bucket bounds.
+    /// Re-registering an existing series with different bounds is a bug
+    /// and panics.
+    pub fn histogram_with_bounds(
         &self,
         name: &str,
         help: &str,
         labels: &[(&str, &str)],
+        bounds: &[u64],
     ) -> Arc<Histogram> {
-        match self.slot(name, help, "histogram", labels, || Slot::H(Arc::default())) {
-            Slot::H(h) => h,
-            _ => unreachable!("kind mismatch is caught in slot()"),
+        let slot = self.slot(name, help, "histogram", labels, || {
+            Slot::H(Arc::new(Histogram::with_bounds(bounds)))
+        });
+        match slot {
+            Slot::H(h) => {
+                assert_eq!(
+                    h.bounds(),
+                    bounds,
+                    "metric {name} re-registered with different bucket bounds"
+                );
+                h
+            }
+            _ => panic!("metric {name} already registered as a different kind"),
         }
     }
 
@@ -263,6 +384,8 @@ impl MetricsRegistry {
 
     /// Render the whole registry in the Prometheus text exposition format.
     /// Families appear in name order; series within a family in label order.
+    /// Histogram bucket lines carry their latest exemplar, when one exists,
+    /// in the OpenMetrics `# {span_id="N"} value` form.
     pub fn render(&self) -> String {
         let mut out = String::new();
         let fams = self.families.read().unwrap();
@@ -279,18 +402,22 @@ impl MetricsRegistry {
                     Slot::G(g) => {
                         let _ = writeln!(out, "{name}{} {}", render_labels(key), g.get());
                     }
+                    Slot::F(g) => {
+                        let _ = writeln!(out, "{name}{} {}", render_labels(key), g.get());
+                    }
                     Slot::H(h) => {
                         let counts = h.bucket_counts();
                         let mut cum = 0u64;
-                        for (i, &bound) in BUCKET_BOUNDS.iter().enumerate() {
+                        for (i, &bound) in h.bounds().iter().enumerate() {
                             cum += counts[i];
                             let mut with_le: Vec<(String, String)> = key.clone();
                             with_le.push(("le".into(), bound.to_string()));
                             with_le.sort();
                             let _ = writeln!(
                                 out,
-                                "{name}_bucket{} {cum}",
-                                render_labels(&with_le)
+                                "{name}_bucket{} {cum}{}",
+                                render_labels(&with_le),
+                                render_exemplar(h.exemplar(i))
                             );
                         }
                         let mut with_le: Vec<(String, String)> = key.clone();
@@ -298,14 +425,13 @@ impl MetricsRegistry {
                         with_le.sort();
                         let _ = writeln!(
                             out,
-                            "{name}_bucket{} {}",
+                            "{name}_bucket{} {}{}",
                             render_labels(&with_le),
-                            h.count()
+                            h.count(),
+                            render_exemplar(h.exemplar(h.bounds().len()))
                         );
-                        let _ =
-                            writeln!(out, "{name}_sum{} {}", render_labels(key), h.sum());
-                        let _ =
-                            writeln!(out, "{name}_count{} {}", render_labels(key), h.count());
+                        let _ = writeln!(out, "{name}_sum{} {}", render_labels(key), h.sum());
+                        let _ = writeln!(out, "{name}_count{} {}", render_labels(key), h.count());
                     }
                 }
             }
@@ -333,6 +459,18 @@ mod tests {
     }
 
     #[test]
+    fn float_gauge_roundtrip_and_render() {
+        let r = MetricsRegistry::new();
+        let g = r.float_gauge("util", "a ratio", &[("node", "1")]);
+        assert_eq!(g.get(), 0.0);
+        g.set(0.25);
+        assert_eq!(g.get(), 0.25);
+        let text = r.render();
+        assert!(text.contains("# TYPE util gauge"), "{text}");
+        assert!(text.contains("util{node=\"1\"} 0.25"), "{text}");
+    }
+
+    #[test]
     fn same_name_and_labels_share_the_instrument() {
         let r = MetricsRegistry::new();
         r.counter("c_total", "help", &[("op", "x")]).inc();
@@ -353,6 +491,14 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "different kind")]
+    fn int_and_float_gauge_mismatch_panics() {
+        let r = MetricsRegistry::new();
+        r.gauge("y", "help", &[]);
+        r.float_gauge("y", "help", &[]);
+    }
+
+    #[test]
     fn histogram_buckets_are_cumulative_in_render() {
         let r = MetricsRegistry::new();
         let h = r.histogram("lat_ns", "latency", &[]);
@@ -366,6 +512,54 @@ mod tests {
         assert!(text.contains("lat_ns_bucket{le=\"+Inf\"} 3"), "{text}");
         assert!(text.contains("lat_ns_count 3"), "{text}");
         assert!(text.contains(&format!("lat_ns_sum {}", 10 + 100 + 100_000_000_000u64)));
+    }
+
+    #[test]
+    fn histogram_with_custom_bounds_uses_them() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram_with_bounds("w_ns", "wall", &[], &[10, 100]);
+        assert_eq!(h.bounds(), &[10, 100]);
+        h.observe(5);
+        h.observe(50);
+        h.observe(500);
+        let text = r.render();
+        assert!(text.contains("w_ns_bucket{le=\"10\"} 1"), "{text}");
+        assert!(text.contains("w_ns_bucket{le=\"100\"} 2"), "{text}");
+        assert!(text.contains("w_ns_bucket{le=\"+Inf\"} 3"), "{text}");
+        assert!(!text.contains("w_ns_bucket{le=\"16\"}"), "{text}");
+        // the same series resolves to the same instrument
+        assert_eq!(r.histogram_with_bounds("w_ns", "wall", &[], &[10, 100]).count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "different bucket bounds")]
+    fn rebounding_an_existing_histogram_panics() {
+        let r = MetricsRegistry::new();
+        r.histogram_with_bounds("w_ns", "wall", &[], &[10, 100]);
+        r.histogram_with_bounds("w_ns", "wall", &[], &[20, 200]);
+    }
+
+    #[test]
+    fn exemplar_lands_on_the_bucket_line() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram_with_bounds("e_ns", "exemplars", &[], &[10, 100]);
+        h.observe_with_exemplar(50, 77);
+        assert_eq!(h.exemplar(1), Some(Exemplar { value: 50, span: 77 }));
+        assert_eq!(h.exemplar(0), None);
+        let text = r.render();
+        assert!(text.contains("e_ns_bucket{le=\"100\"} 1 # {span_id=\"77\"} 50"), "{text}");
+        // +Inf exemplar for an above-all-bounds value
+        h.observe_with_exemplar(1000, 78);
+        let text = r.render();
+        assert!(text.contains("e_ns_bucket{le=\"+Inf\"} 2 # {span_id=\"78\"} 1000"), "{text}");
+    }
+
+    #[test]
+    fn exemplar_with_span_zero_is_not_recorded() {
+        let h = Histogram::with_bounds(&[10]);
+        h.observe_with_exemplar(5, 0);
+        assert_eq!(h.count(), 1, "the observation itself still lands");
+        assert_eq!(h.exemplar(0), None);
     }
 
     #[test]

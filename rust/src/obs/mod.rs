@@ -11,6 +11,12 @@
 //!   as JSONL on demand (`Request::TraceDump`), on coordinator shutdown,
 //!   and on panic ([`install_panic_hook`]).
 //!
+//! Both are also reachable over plain HTTP: [`http::ObsHttpServer`] serves
+//! `GET /metrics` (with OpenMetrics exemplars linking histogram buckets to
+//! recorder span ids), `GET /trace`, and `GET /healthz`, so stock
+//! Prometheus can scrape a pool started with `PoolConfig::metrics_listen`
+//! (or via the `emucxl stats --listen` wire-protocol bridge).
+//!
 //! Correlation uses a thread-local `(span, tenant)` context: the
 //! coordinator opens a fresh span per wire request ([`span`]); library
 //! entry points (API calls, middleware ops) open one only when none is
@@ -19,6 +25,7 @@
 //! clock (`timing::clock`) — they order events on the modeled timeline,
 //! not wall time.
 
+pub mod http;
 pub mod metrics;
 pub mod recorder;
 
@@ -26,7 +33,7 @@ use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Once, OnceLock};
 
-pub use metrics::{Counter, Gauge, Histogram, MetricsRegistry, BUCKET_BOUNDS};
+pub use metrics::{Counter, Exemplar, FloatGauge, Gauge, Histogram, MetricsRegistry, BUCKET_BOUNDS};
 pub use recorder::{FlightRecorder, Subsystem, TraceEvent};
 
 /// Default number of events the flight recorder retains.

@@ -174,12 +174,36 @@ impl FlightRecorder {
         ring.iter().skip(skip).cloned().collect()
     }
 
+    /// Whether any held event carries `span` — resolves a metrics exemplar
+    /// back into the ring (false once the span's events were evicted).
+    pub fn contains_span(&self, span: u64) -> bool {
+        self.ring.lock().unwrap().iter().any(|e| e.span == span)
+    }
+
+    /// The most recent `max` events of one span, oldest first.
+    pub fn snapshot_span(&self, span: u64, max: usize) -> Vec<TraceEvent> {
+        let ring = self.ring.lock().unwrap();
+        let mut events: Vec<TraceEvent> =
+            ring.iter().filter(|e| e.span == span).cloned().collect();
+        let skip = events.len().saturating_sub(max);
+        events.drain(..skip);
+        events
+    }
+
     /// JSONL dump of the most recent `max` events, oldest first. Each line
     /// is one event object; the result ends with a newline unless empty.
     pub fn dump_jsonl(&self, max: usize) -> String {
-        let events = self.snapshot(max);
+        Self::to_jsonl(&self.snapshot(max))
+    }
+
+    /// JSONL dump of one span's most recent `max` events, oldest first.
+    pub fn dump_jsonl_span(&self, span: u64, max: usize) -> String {
+        Self::to_jsonl(&self.snapshot_span(span, max))
+    }
+
+    fn to_jsonl(events: &[TraceEvent]) -> String {
         let mut out = String::with_capacity(events.len() * 128);
-        for ev in &events {
+        for ev in events {
             let _ = writeln!(out, "{}", ev.to_json());
         }
         out
@@ -253,6 +277,33 @@ mod tests {
         }
         assert!(dump.contains("\"subsystem\":\"kv\""));
         assert!(dump.contains("\"subsystem\":\"coordinator\""));
+    }
+
+    #[test]
+    fn span_lookup_filters_and_resolves() {
+        let r = FlightRecorder::new(8);
+        let mut a = ev(Subsystem::Api, "read");
+        a.span = 11;
+        let mut b = ev(Subsystem::Device, "pread");
+        b.span = 11;
+        let mut c = ev(Subsystem::Kv, "get");
+        c.span = 12;
+        r.record(a);
+        r.record(b);
+        r.record(c);
+
+        assert!(r.contains_span(11));
+        assert!(r.contains_span(12));
+        assert!(!r.contains_span(99));
+
+        let snap = r.snapshot_span(11, usize::MAX);
+        assert_eq!(snap.len(), 2);
+        assert!(snap.iter().all(|e| e.span == 11));
+        assert_eq!(r.snapshot_span(11, 1).len(), 1, "max caps the span view");
+
+        let dump = r.dump_jsonl_span(12, usize::MAX);
+        assert_eq!(dump.lines().count(), 1);
+        assert!(dump.contains("\"span\":12,"), "{dump}");
     }
 
     #[test]

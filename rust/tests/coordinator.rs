@@ -17,6 +17,7 @@ fn server() -> PoolServer {
         max_wait: Duration::from_micros(100),
         trace_dump: None,
         recorder_capacity: None,
+        metrics_listen: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }

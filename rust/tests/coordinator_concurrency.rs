@@ -25,6 +25,7 @@ fn server() -> PoolServer {
         trace_dump: None,
         // Exercise the PoolConfig knob and keep the soak test's ring small.
         recorder_capacity: Some(1024),
+        metrics_listen: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }
@@ -152,9 +153,16 @@ fn oversized_read_len_is_rejected_before_allocation() {
 
 /// Concurrent readers make progress while another tenant migrates the
 /// whole time — the writer cannot starve or deadlock the read path.
+///
+/// Beyond "some progress", this bounds per-reader starvation: no single
+/// read may stall longer than `MAX_STALL` while the migrator churns. A
+/// fair-enough lock keeps reader stalls in the microsecond range; the
+/// generous bound only trips if a reader is actually parked behind the
+/// whole migration sequence.
 #[test]
 fn readers_progress_while_migrator_churns() {
     const READERS: u32 = 4;
+    const MAX_STALL: Duration = Duration::from_secs(2);
     let srv = server();
     let addr = srv.addr();
     let stop = Arc::new(AtomicBool::new(false));
@@ -162,18 +170,21 @@ fn readers_progress_while_migrator_churns() {
     let readers: Vec<_> = (0..READERS)
         .map(|t| {
             let stop = Arc::clone(&stop);
-            std::thread::spawn(move || -> u64 {
+            std::thread::spawn(move || -> (u64, Duration) {
                 let mut c = PoolClient::connect(addr, 1 << 20).unwrap();
                 let (base, _) = c.alloc(4096, 0).unwrap();
                 c.write(base, &[t as u8; 32]).unwrap();
                 let mut reads = 0u64;
+                let mut worst_stall = Duration::ZERO;
                 while !stop.load(Ordering::SeqCst) {
+                    let t0 = std::time::Instant::now();
                     let (data, _) = c.read(base, 32).unwrap();
+                    worst_stall = worst_stall.max(t0.elapsed());
                     assert!(data.iter().all(|&b| b == t as u8));
                     reads += 1;
                 }
                 c.bye().unwrap();
-                reads
+                (reads, worst_stall)
             })
         })
         .collect();
@@ -191,7 +202,11 @@ fn readers_progress_while_migrator_churns() {
     migrator.join().unwrap();
     stop.store(true, Ordering::SeqCst);
     for r in readers {
-        let reads = r.join().unwrap();
+        let (reads, worst_stall) = r.join().unwrap();
         assert!(reads > 0, "every reader made progress during migration");
+        assert!(
+            worst_stall < MAX_STALL,
+            "a reader stalled {worst_stall:?} behind the migrator (bound {MAX_STALL:?})"
+        );
     }
 }

@@ -24,6 +24,7 @@ fn server() -> PoolServer {
         max_wait: Duration::from_micros(100),
         trace_dump: None,
         recorder_capacity: None,
+        metrics_listen: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }
@@ -68,6 +69,12 @@ fn metrics_cover_all_layers_after_mixed_workload() {
     // coordinator + per-tenant series
     assert!(text.contains("emucxl_coordinator_requests_total{op=\"alloc\",outcome=\"ok\"}"));
     assert!(text.contains("# TYPE emucxl_coordinator_request_wall_ns histogram"));
+    // the wall histogram registers its own µs-grid bounds, not the
+    // powers-of-four default (whose grid has no 1000 ns bucket)
+    assert!(
+        text.contains("emucxl_coordinator_request_wall_ns_bucket{le=\"1000\","),
+        "wall histogram should carry the tight per-request bucket bounds"
+    );
     assert!(
         text.contains(&format!("emucxl_tenant_ops_total{{op=\"kv_put\",tenant=\"{tenant}\"}}")),
         "missing per-tenant series for tenant {tenant} in:\n{text}"
@@ -188,6 +195,7 @@ fn shutdown_writes_trace_dump_file() {
         max_wait: Duration::from_micros(100),
         trace_dump: Some(path.clone()),
         recorder_capacity: None,
+        metrics_listen: None,
     };
     let mut srv = PoolServer::start(cfg, 0).expect("start server");
     let mut client = PoolClient::connect(srv.addr(), 1 << 20).unwrap();

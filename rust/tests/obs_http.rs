@@ -1,0 +1,257 @@
+//! End-to-end tests of the HTTP observability plane: a real coordinator
+//! with `metrics_listen` set, scraped with nothing but raw TCP — exactly
+//! what a stock Prometheus client does. Also covers the `stats --listen`
+//! wire-protocol bridge and concurrent exposition under load.
+//!
+//! The registry and recorder are process-wide, so assertions check
+//! presence and well-formedness, not exact values.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use emucxl::config::EmucxlConfig;
+use emucxl::coordinator::client::{start_stats_bridge, PoolClient};
+use emucxl::coordinator::server::{PoolConfig, PoolServer};
+use emucxl::middleware::kv::GetPolicy;
+use emucxl::{NODE_LOCAL, NODE_REMOTE};
+
+fn server(metrics_listen: Option<u16>) -> PoolServer {
+    let cfg = PoolConfig {
+        emucxl: EmucxlConfig::sized(8 << 20, 32 << 20),
+        kv_local_capacity: 4,
+        kv_policy: GetPolicy::Promote,
+        batch: 4,
+        max_wait: Duration::from_micros(100),
+        trace_dump: None,
+        recorder_capacity: None,
+        metrics_listen,
+    };
+    PoolServer::start(cfg, 0).expect("start server")
+}
+
+/// One plain HTTP/1.1 GET over raw TCP; returns (head, body).
+fn http_get(addr: SocketAddr, target: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect to obs plane");
+    write!(s, "GET {target} HTTP/1.1\r\nHost: emucxl\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").expect("head/body split");
+    (head.to_string(), body.to_string())
+}
+
+/// Every span id carried by an exemplar-annotated bucket line.
+fn exemplar_spans(metrics: &str) -> Vec<u64> {
+    metrics
+        .lines()
+        .filter_map(|l| {
+            let (_, rest) = l.split_once(" # {span_id=\"")?;
+            let (id, _) = rest.split_once('"')?;
+            id.parse().ok()
+        })
+        .collect()
+}
+
+/// A metrics line must be empty, a `#` comment, or `series value` with an
+/// optional ` # {span_id="N"} V` exemplar suffix — even mid-scrape while
+/// writer threads race the renderer.
+fn assert_metric_line(line: &str) {
+    if line.is_empty() || line.starts_with('#') {
+        return;
+    }
+    let (series, exemplar) = match line.split_once(" # ") {
+        Some((s, e)) => (s, Some(e)),
+        None => (line, None),
+    };
+    let (_, value) = series.rsplit_once(' ').unwrap_or_else(|| panic!("no value in: {line}"));
+    assert!(value.parse::<f64>().is_ok(), "unparseable value in: {line}");
+    if let Some(e) = exemplar {
+        let rest = e
+            .strip_prefix("{span_id=\"")
+            .unwrap_or_else(|| panic!("malformed exemplar in: {line}"));
+        let (span, val) =
+            rest.split_once("\"} ").unwrap_or_else(|| panic!("malformed exemplar in: {line}"));
+        assert!(span.parse::<u64>().is_ok(), "bad exemplar span in: {line}");
+        assert!(val.parse::<f64>().is_ok(), "bad exemplar value in: {line}");
+    }
+}
+
+/// The acceptance path of the PR: boot a pool with the HTTP plane, drive a
+/// workload over the wire, scrape it with a plain HTTP client, and follow
+/// an exemplar's span id from a /metrics bucket line into the /trace dump.
+#[test]
+fn scrape_resolves_exemplars_and_exports_link_utilization() {
+    let srv = server(Some(0));
+    let http = srv.metrics_addr().expect("metrics_listen resolves an HTTP address");
+
+    let mut c = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let (a, _) = c.alloc(8192, NODE_REMOTE).unwrap();
+    c.write(a, &[9u8; 4096]).unwrap();
+    let _ = c.read(a, 4096).unwrap();
+    c.kv_put(b"scrape-key", b"scrape-value").unwrap();
+    assert!(c.kv_get(b"scrape-key").unwrap().0.is_some());
+    c.free(a).unwrap();
+
+    let (head, body) = http_get(http, "/healthz");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert_eq!(body, "ok\n");
+
+    let (head, metrics) = http_get(http, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("Content-Type: text/plain; version=0.0.4"), "{head}");
+    // per-node link-utilization gauges, derived from window occupancy
+    assert!(metrics.contains("# TYPE emucxl_link_utilization gauge"), "{metrics}");
+    assert!(
+        metrics.contains("emucxl_link_utilization{node=\"1\"}"),
+        "remote node must export a utilization gauge:\n{metrics}"
+    );
+    for line in metrics.lines() {
+        assert_metric_line(line);
+    }
+
+    // at least one histogram bucket carries an exemplar, and its span id
+    // resolves in the flight-recorder dump (the handler thread records the
+    // trace event after replying, so allow it a moment to land)
+    let spans = exemplar_spans(&metrics);
+    assert!(!spans.is_empty(), "no exemplar-annotated bucket line in:\n{metrics}");
+    let mut resolved = None;
+    'outer: for _ in 0..200 {
+        let (_, trace) = http_get(http, "/trace");
+        for s in &spans {
+            if trace.contains(&format!("\"span\":{s},")) {
+                resolved = Some(*s);
+                break 'outer;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let span = resolved.expect("an exemplar span id must resolve in the /trace dump");
+
+    // ?span= narrows the dump to that one request's events
+    let (_, filtered) = http_get(http, &format!("/trace?span={span}"));
+    assert!(!filtered.is_empty(), "span filter returned nothing for {span}");
+    for line in filtered.lines() {
+        assert!(line.contains(&format!("\"span\":{span},")), "foreign span in: {line}");
+        assert!(line.starts_with('{') && line.ends_with('}'), "bad JSONL line: {line}");
+    }
+
+    // ?max= caps the dump
+    let (_, capped) = http_get(http, "/trace?max=5");
+    assert!(capped.lines().count() <= 5, "trace max must be respected");
+
+    // unknown paths and methods fail cleanly
+    let (head, _) = http_get(http, "/nope");
+    assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+    c.bye().unwrap();
+}
+
+/// `emucxl stats --listen`: a daemon started WITHOUT `--metrics-listen` is
+/// still scrapeable through the wire-protocol bridge, and the bridge's
+/// healthz tells the truth once the daemon goes away.
+#[test]
+fn stats_bridge_proxies_a_daemon_without_http_plane() {
+    let mut srv = server(None);
+    assert!(srv.metrics_addr().is_none(), "no HTTP plane was configured");
+    let mut c = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let (a, _) = c.alloc(4096, NODE_LOCAL).unwrap();
+    c.write(a, &[3u8; 64]).unwrap();
+    c.free(a).unwrap();
+    c.bye().unwrap();
+
+    let bridge = start_stats_bridge(srv.addr(), 0).expect("start bridge");
+
+    let (head, body) = http_get(bridge.addr(), "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(body.contains("# TYPE emucxl_coordinator_requests_total counter"), "{body}");
+    for line in body.lines() {
+        assert_metric_line(line);
+    }
+
+    let (head, trace) = http_get(bridge.addr(), "/trace?max=3");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(trace.lines().count() <= 3, "bridge must forward the max cap");
+
+    let (head, _) = http_get(bridge.addr(), "/healthz");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+
+    srv.shutdown();
+    // the daemon is gone; the per-request connections make this honest
+    let mut unhealthy = false;
+    for _ in 0..200 {
+        let (head, _) = http_get(bridge.addr(), "/healthz");
+        if head.starts_with("HTTP/1.1 503") {
+            unhealthy = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(unhealthy, "bridge healthz must report 503 once the daemon is unreachable");
+}
+
+/// Exposition stays well-formed under concurrency: worker tenants hammer
+/// the pool (bumping counters, histograms, exemplar slots and the trace
+/// ring) while scraper threads render /metrics and /trace the whole time.
+#[test]
+fn concurrent_scrapes_race_writers_without_tearing() {
+    const WORKERS: u32 = 4;
+    const SCRAPERS: usize = 2;
+    const SCRAPES: usize = 25;
+
+    let srv = server(Some(0));
+    let http = srv.metrics_addr().unwrap();
+    let addr = srv.addr();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let workers: Vec<_> = (0..WORKERS)
+        .map(|t| {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut c = PoolClient::connect(addr, 1 << 20).unwrap();
+                let (mut a, _) = c.alloc(4096, t % 2).unwrap();
+                let mut i = 0u32;
+                while !stop.load(Ordering::SeqCst) {
+                    c.write(a, &[t as u8; 256]).unwrap();
+                    let _ = c.read(a, 256).unwrap();
+                    let (new_a, _) = c.migrate(a, (t + i) % 2).unwrap();
+                    a = new_a;
+                    i += 1;
+                }
+                c.free(a).unwrap();
+                c.bye().unwrap();
+            })
+        })
+        .collect();
+
+    let scrapers: Vec<_> = (0..SCRAPERS)
+        .map(|_| {
+            std::thread::spawn(move || {
+                for _ in 0..SCRAPES {
+                    let (head, metrics) = http_get(http, "/metrics");
+                    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+                    for line in metrics.lines() {
+                        assert_metric_line(line);
+                    }
+                    let (head, trace) = http_get(http, "/trace?max=64");
+                    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+                    for line in trace.lines() {
+                        assert!(
+                            line.starts_with('{') && line.ends_with('}'),
+                            "bad JSONL line: {line}"
+                        );
+                    }
+                }
+            })
+        })
+        .collect();
+
+    for s in scrapers {
+        s.join().unwrap();
+    }
+    stop.store(true, Ordering::SeqCst);
+    for w in workers {
+        w.join().unwrap();
+    }
+}
