@@ -164,6 +164,15 @@ impl PoolClient {
         }
     }
 
+    /// OpenMetrics text exposition (exemplars on histogram buckets,
+    /// terminating `# EOF`) of the coordinator's metrics.
+    pub fn metrics_openmetrics(&mut self) -> Result<String> {
+        match self.call(Request::MetricsOm)? {
+            Response::Text { body } => Ok(body),
+            other => Err(unexpected(other)),
+        }
+    }
+
     /// JSONL dump of the newest `max` flight-recorder events (0 = all).
     pub fn trace_dump(&mut self, max: u32) -> Result<String> {
         match self.call(Request::TraceDump { max })? {
@@ -191,29 +200,38 @@ struct BridgeSource {
 }
 
 impl ObsSource for BridgeSource {
-    fn metrics(&self) -> std::result::Result<String, String> {
+    fn metrics(&self, openmetrics: bool) -> std::result::Result<String, String> {
         let mut c = PoolClient::connect_scraper(self.daemon).map_err(|e| e.to_string())?;
-        let body = c.metrics().map_err(|e| e.to_string())?;
+        let body = if openmetrics {
+            c.metrics_openmetrics().map_err(|e| e.to_string())?
+        } else {
+            c.metrics().map_err(|e| e.to_string())?
+        };
         let _ = c.bye();
         Ok(body)
     }
 
     fn trace(&self, max: usize, span: Option<u64>) -> std::result::Result<String, String> {
-        let wire_max = u32::try_from(max).unwrap_or(0); // 0 = all, wire-side
         let mut c = PoolClient::connect_scraper(self.daemon).map_err(|e| e.to_string())?;
-        let dump = c.trace_dump(wire_max).map_err(|e| e.to_string())?;
-        let _ = c.bye();
-        Ok(match span {
-            // The wire protocol has no span filter; apply it on the JSONL.
+        let body = match span {
+            // The wire protocol has no span filter. Fetch the full dump,
+            // filter to the span, THEN cap at the newest `max` — matching
+            // LocalSource, where the wire-side cap before filtering could
+            // starve the span's (older) events out of the reply.
             Some(s) => {
+                let dump = c.trace_dump(0).map_err(|e| e.to_string())?;
                 let needle = format!("\"span\":{s},");
-                dump.lines()
-                    .filter(|l| l.contains(&needle))
-                    .map(|l| format!("{l}\n"))
-                    .collect()
+                let lines: Vec<&str> = dump.lines().filter(|l| l.contains(&needle)).collect();
+                let skip = lines.len().saturating_sub(max);
+                lines[skip..].iter().map(|l| format!("{l}\n")).collect()
             }
-            None => dump,
-        })
+            None => {
+                let wire_max = u32::try_from(max).unwrap_or(0); // 0 = all
+                c.trace_dump(wire_max).map_err(|e| e.to_string())?
+            }
+        };
+        let _ = c.bye();
+        Ok(body)
     }
 
     fn healthy(&self) -> bool {

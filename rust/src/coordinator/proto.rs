@@ -45,6 +45,10 @@ pub enum Request {
     /// JSONL dump of the newest `max` flight-recorder events (0 = all).
     /// Allowed before `Hello`.
     TraceDump { max: u32 },
+    /// OpenMetrics text exposition (exemplars, `# EOF`) of every metric —
+    /// what the HTTP plane serves to scrapers that negotiate
+    /// `application/openmetrics-text`. Allowed before `Hello`.
+    MetricsOm,
 }
 
 /// Coordinator -> client responses.
@@ -175,6 +179,7 @@ impl Request {
             Request::Bye => Enc::new(12).done(),
             Request::Metrics => Enc::new(13).done(),
             Request::TraceDump { max } => Enc::new(14).u32(*max).done(),
+            Request::MetricsOm => Enc::new(15).done(),
         }
     }
 
@@ -196,6 +201,7 @@ impl Request {
             12 => Request::Bye,
             13 => Request::Metrics,
             14 => Request::TraceDump { max: d.u32()? },
+            15 => Request::MetricsOm,
             t => return Err(EmucxlError::Protocol(format!("bad request tag {t}"))),
         };
         d.finish()?;
@@ -311,6 +317,7 @@ mod tests {
         roundtrip_req(Request::KvDelete { key: b"x".to_vec() });
         roundtrip_req(Request::Bye);
         roundtrip_req(Request::Metrics);
+        roundtrip_req(Request::MetricsOm);
         roundtrip_req(Request::TraceDump { max: 0 });
         roundtrip_req(Request::TraceDump { max: u32::MAX });
     }

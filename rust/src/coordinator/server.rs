@@ -120,9 +120,13 @@ struct PoolObsSource {
 }
 
 impl ObsSource for PoolObsSource {
-    fn metrics(&self) -> std::result::Result<String, String> {
+    fn metrics(&self, openmetrics: bool) -> std::result::Result<String, String> {
         refresh_pool_gauges(&self.shared);
-        Ok(obs::metrics().render())
+        Ok(if openmetrics {
+            obs::metrics().render_openmetrics()
+        } else {
+            obs::metrics().render()
+        })
     }
 
     fn trace(&self, max: usize, span: Option<u64>) -> std::result::Result<String, String> {
@@ -180,11 +184,10 @@ impl PoolServer {
             batcher,
             stop: AtomicBool::new(false),
         });
-        let s2 = Arc::clone(&shared);
-        let accept = std::thread::Builder::new()
-            .name("emucxl-accept".into())
-            .spawn(move || accept_loop(listener, s2))
-            .expect("spawn accept loop");
+        // Start the HTTP plane before the wire accept loop: if its port is
+        // taken, the `?` returns with no accept thread spawned — `listener`
+        // just drops — instead of leaking a running thread and a bound
+        // wire port behind the error.
         let http = match config.metrics_listen {
             Some(port) => Some(ObsHttpServer::start(
                 port,
@@ -192,6 +195,11 @@ impl PoolServer {
             )?),
             None => None,
         };
+        let s2 = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("emucxl-accept".into())
+            .spawn(move || accept_loop(listener, s2))
+            .expect("spawn accept loop");
         Ok(Self { addr, shared, accept: Some(accept), trace_dump: config.trace_dump, http })
     }
 
@@ -334,6 +342,7 @@ fn op_name(req: &Request) -> &'static str {
         Request::KvDelete { .. } => "kv_delete",
         Request::Bye => "bye",
         Request::Metrics => "metrics",
+        Request::MetricsOm => "metrics",
         Request::TraceDump { .. } => "trace_dump",
     }
 }
@@ -499,7 +508,10 @@ fn handle_request(
     if tenant_id.is_none()
         && !matches!(
             req,
-            Request::Hello { .. } | Request::Metrics | Request::TraceDump { .. }
+            Request::Hello { .. }
+                | Request::Metrics
+                | Request::MetricsOm
+                | Request::TraceDump { .. }
         )
     {
         return Response::Error { msg: "not registered: send Hello first".into() };
@@ -522,6 +534,10 @@ fn handle_request(
         Request::Metrics => {
             refresh_pool_gauges(shared);
             Response::Text { body: obs::metrics().render() }
+        }
+        Request::MetricsOm => {
+            refresh_pool_gauges(shared);
+            Response::Text { body: obs::metrics().render_openmetrics() }
         }
         Request::TraceDump { max } => {
             let max = if max == 0 { usize::MAX } else { max as usize };

@@ -35,8 +35,9 @@
 //!
 //! For stock HTTP tooling there is a zero-dependency scrape plane
 //! ([`obs::http`]): `emucxl serve --metrics-listen PORT` serves
-//! `GET /metrics` (Prometheus text with OpenMetrics exemplars linking
-//! histogram buckets to flight-recorder span ids), `GET /trace`
+//! `GET /metrics` (classic Prometheus text by default; clients that
+//! `Accept: application/openmetrics-text` get OpenMetrics with exemplars
+//! linking histogram buckets to flight-recorder span ids), `GET /trace`
 //! (JSONL, `?max=N&span=N`) and `GET /healthz` on `127.0.0.1`. Histogram
 //! bucket bounds are per-metric (`MetricsRegistry::histogram_with_bounds`),
 //! and the device layer exports per-node `emucxl_link_utilization` gauges

@@ -54,6 +54,19 @@ fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default
     flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Port value of a scrape-listen flag. A bare flag (the parser stores
+/// `"true"`) picks the conventional Prometheus port 9184; anything else
+/// must parse as a port — a typo like `--metrics-listen 70000` is an
+/// error, not a silent fallback to an unexpected port.
+fn listen_port(value: &str, flag: &str) -> Result<u16> {
+    if value == "true" {
+        return Ok(9184);
+    }
+    value.parse().map_err(|_| {
+        emucxl::error::EmucxlError::InvalidArgument(format!("bad --{flag} port: {value}"))
+    })
+}
+
 fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = EmucxlConfig::default();
     println!("emucxl virtual appliance");
@@ -171,8 +184,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         cfg.trace_dump = Some(path.into());
     }
     if let Some(v) = flags.get("metrics-listen") {
-        // bare `--metrics-listen` picks the conventional scrape port
-        cfg.metrics_listen = Some(v.parse().unwrap_or(9184));
+        cfg.metrics_listen = Some(listen_port(v, "metrics-listen")?);
     }
     if !flags.contains_key("no-warmup") {
         warmup()?;
@@ -199,7 +211,7 @@ fn cmd_stats(flags: &HashMap<String, String>) -> Result<()> {
         // Bridge mode: scrape endpoint for a daemon started without
         // --metrics-listen. Proxies /metrics, /trace and /healthz over
         // the wire protocol; runs until killed.
-        let http_port = v.parse().unwrap_or(9184);
+        let http_port = listen_port(v, "listen")?;
         let bridge = emucxl::coordinator::client::start_stats_bridge(addr, http_port)?;
         println!(
             "scrape bridge for {addr} on http://{}/metrics (also /trace, /healthz)",

@@ -3,8 +3,12 @@
 //! A small threaded server that lets stock Prometheus / Grafana / `curl`
 //! scrape a running pool without speaking the custom wire protocol:
 //!
-//! * `GET /metrics`  — Prometheus text exposition (with OpenMetrics
-//!   exemplars on histogram bucket lines).
+//! * `GET /metrics`  — metrics exposition. Classic Prometheus text
+//!   (`text/plain; version=0.0.4`, no exemplars) by default; clients
+//!   whose `Accept` header names `application/openmetrics-text` get the
+//!   OpenMetrics form instead — exemplars on histogram bucket lines and a
+//!   terminating `# EOF` — under that content type. Exemplar syntax would
+//!   break the classic parser, so it is never mixed into `text/plain`.
 //! * `GET /trace`    — flight-recorder JSONL; `?max=N` caps the number of
 //!   events (0 or absent = all held), `?span=N` filters to one span.
 //! * `GET /healthz`  — `200 ok` while the backing source is healthy,
@@ -17,7 +21,7 @@
 //! gauges before rendering), or a wire-protocol proxy to a remote daemon
 //! (`coordinator::client::start_stats_bridge`).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -36,8 +40,10 @@ const CLIENT_TIMEOUT: Duration = Duration::from_secs(5);
 /// bodies, so a proxying source can surface "daemon unreachable" to the
 /// scraper instead of dying.
 pub trait ObsSource: Send + Sync {
-    /// Body for `GET /metrics`. May refresh point-in-time gauges first.
-    fn metrics(&self) -> Result<String, String>;
+    /// Body for `GET /metrics` — OpenMetrics (exemplars, `# EOF`) when
+    /// `openmetrics`, classic Prometheus text otherwise. May refresh
+    /// point-in-time gauges first.
+    fn metrics(&self, openmetrics: bool) -> Result<String, String>;
 
     /// Body for `GET /trace`: newest-`max` events as JSONL, optionally
     /// filtered to one span id.
@@ -54,8 +60,12 @@ pub trait ObsSource: Send + Sync {
 pub struct LocalSource;
 
 impl ObsSource for LocalSource {
-    fn metrics(&self) -> Result<String, String> {
-        Ok(obs::metrics().render())
+    fn metrics(&self, openmetrics: bool) -> Result<String, String> {
+        Ok(if openmetrics {
+            obs::metrics().render_openmetrics()
+        } else {
+            obs::metrics().render()
+        })
     }
 
     fn trace(&self, max: usize, span: Option<u64>) -> Result<String, String> {
@@ -144,21 +154,35 @@ fn serve_connection(stream: TcpStream, source: Arc<dyn ObsSource>) -> std::io::R
     stream.set_write_timeout(Some(CLIENT_TIMEOUT)).ok();
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
+    // `take` bounds the head at the transport: a client streaming one
+    // endless line without a newline hits the cap instead of growing the
+    // line buffer without limit.
+    let mut reader = BufReader::new(stream.take(MAX_HEAD_BYTES as u64));
 
     let mut request_line = String::new();
     reader.read_line(&mut request_line)?;
-    // Drain (and bound) the header block; we don't interpret any of it.
-    let mut head_bytes = request_line.len();
+    // Drain the header block, keeping only `Accept` (for /metrics content
+    // negotiation); everything else is ignored.
+    let mut accept = String::new();
     loop {
         let mut line = String::new();
         let n = reader.read_line(&mut line)?;
-        head_bytes += n;
-        if n == 0 || line == "\r\n" || line == "\n" {
+        if n == 0 {
+            // EOF before the blank line: either the head budget ran out
+            // mid-request or the client hung up early.
+            if reader.get_ref().limit() == 0 {
+                let status = "431 Request Header Fields Too Large";
+                return respond(&mut writer, status, "", "", false);
+            }
             break;
         }
-        if head_bytes > MAX_HEAD_BYTES {
-            return respond(&mut writer, "431 Request Header Fields Too Large", "", "", false);
+        if line == "\r\n" || line == "\n" {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("accept") {
+                accept = value.trim().to_ascii_lowercase();
+            }
         }
     }
 
@@ -192,12 +216,24 @@ fn serve_connection(stream: TcpStream, source: Arc<dyn ObsSource>) -> std::io::R
                 respond(&mut writer, status, text_plain, "unhealthy\n", head_only)
             }
         }
-        "/metrics" => match source.metrics() {
-            Ok(body) => respond(&mut writer, "200 OK", text_plain, &body, head_only),
-            Err(e) => {
-                respond(&mut writer, "502 Bad Gateway", text_plain, &format!("{e}\n"), head_only)
+        "/metrics" => {
+            let openmetrics = accept.contains("application/openmetrics-text");
+            let content_type = if openmetrics {
+                "Content-Type: application/openmetrics-text; version=1.0.0; charset=utf-8\r\n"
+            } else {
+                text_plain
+            };
+            match source.metrics(openmetrics) {
+                Ok(body) => respond(&mut writer, "200 OK", content_type, &body, head_only),
+                Err(e) => respond(
+                    &mut writer,
+                    "502 Bad Gateway",
+                    text_plain,
+                    &format!("{e}\n"),
+                    head_only,
+                ),
             }
-        },
+        }
         "/trace" => {
             let max = match query_u64(query, "max") {
                 None | Some(0) => usize::MAX,
@@ -272,8 +308,12 @@ mod tests {
     }
 
     impl ObsSource for CannedSource {
-        fn metrics(&self) -> Result<String, String> {
-            Ok("# TYPE canned counter\ncanned 1\n".into())
+        fn metrics(&self, openmetrics: bool) -> Result<String, String> {
+            Ok(if openmetrics {
+                "# TYPE canned counter\ncanned_total 1 # {span_id=\"9\"} 1\n# EOF\n".into()
+            } else {
+                "# TYPE canned counter\ncanned 1\n".into()
+            })
         }
 
         fn trace(&self, max: usize, span: Option<u64>) -> Result<String, String> {
@@ -338,6 +378,52 @@ mod tests {
         assert!(buf.starts_with("HTTP/1.1 405"), "{buf}");
         assert!(buf.contains("Allow: GET, HEAD"), "{buf}");
 
+        srv.shutdown();
+    }
+
+    #[test]
+    fn accept_header_negotiates_openmetrics() {
+        let mut srv = ObsHttpServer::start(0, Arc::new(CannedSource { healthy: true })).unwrap();
+        let addr = srv.addr();
+
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(
+            s,
+            "GET /metrics HTTP/1.1\r\nHost: x\r\n\
+             Accept: application/openmetrics-text; version=1.0.0\r\n\
+             Connection: close\r\n\r\n"
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (head, body) = buf.split_once("\r\n\r\n").unwrap();
+        assert!(head.contains("Content-Type: application/openmetrics-text"), "{head}");
+        assert!(body.contains("# {span_id=\"9\"}"), "{body}");
+        assert!(body.ends_with("# EOF\n"), "{body}");
+
+        // without the Accept header: classic text, no exemplar syntax
+        let (head, body) = get(addr, "/metrics");
+        assert!(head.contains("Content-Type: text/plain; version=0.0.4"), "{head}");
+        assert!(!body.contains("# {"), "{body}");
+
+        srv.shutdown();
+    }
+
+    #[test]
+    fn single_endless_header_line_is_rejected_not_buffered() {
+        let mut srv = ObsHttpServer::start(0, Arc::new(CannedSource { healthy: true })).unwrap();
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        let request_line = "GET /metrics HTTP/1.1\r\n";
+        let prefix = "X-Flood: ";
+        write!(s, "{request_line}{prefix}").unwrap();
+        // One endless header line, never terminated: pad the head to
+        // exactly its budget so the server consumes every byte (no RST
+        // race on close) and must reject once the budget is spent.
+        let huge = vec![b'x'; MAX_HEAD_BYTES - request_line.len() - prefix.len()];
+        s.write_all(&huge).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(buf.starts_with("HTTP/1.1 431"), "{buf}");
         srv.shutdown();
     }
 

@@ -9,9 +9,15 @@
 //!
 //! Histograms carry OpenMetrics *exemplars*: [`Histogram::observe_with_exemplar`]
 //! attaches the flight-recorder span id of a sampled observation to the
-//! bucket the value fell in, and `render` appends it to that bucket line as
-//! `... # {span_id="N"} value`. A scraped p99 outlier therefore links
-//! directly to its trace in the `/trace` JSONL dump.
+//! bucket the value fell in. Exemplar syntax (`... # {span_id="N"} value`)
+//! exists only in the OpenMetrics exposition format — the classic
+//! Prometheus text parser reads the token after the value as a timestamp
+//! and rejects the line — so [`MetricsRegistry::render`] (classic
+//! `text/plain; version=0.0.4`) never emits them, and
+//! [`MetricsRegistry::render_openmetrics`] emits the full OpenMetrics form
+//! (exemplars on bucket lines, counter-family naming, terminating
+//! `# EOF`). A scraped p99 outlier therefore links directly to its trace
+//! in the `/trace` JSONL dump, for scrapers that negotiate OpenMetrics.
 
 use std::collections::{BTreeMap, HashMap};
 use std::fmt::Write as _;
@@ -382,16 +388,36 @@ impl MetricsRegistry {
         self.len() == 0
     }
 
-    /// Render the whole registry in the Prometheus text exposition format.
-    /// Families appear in name order; series within a family in label order.
-    /// Histogram bucket lines carry their latest exemplar, when one exists,
-    /// in the OpenMetrics `# {span_id="N"} value` form.
+    /// Render the whole registry in the classic Prometheus text exposition
+    /// format (`text/plain; version=0.0.4`). Families appear in name
+    /// order; series within a family in label order. No exemplars: the
+    /// classic parser would read the exemplar suffix as a timestamp and
+    /// reject the scrape — use [`Self::render_openmetrics`] for them.
     pub fn render(&self) -> String {
+        self.render_impl(false)
+    }
+
+    /// Render in the OpenMetrics 1.0 exposition format
+    /// (`application/openmetrics-text`): counter families drop their
+    /// `_total` suffix on the `# HELP`/`# TYPE` lines (samples keep it),
+    /// histogram bucket lines carry their latest exemplar as
+    /// `# {span_id="N"} value`, and the body ends with `# EOF`.
+    pub fn render_openmetrics(&self) -> String {
+        self.render_impl(true)
+    }
+
+    fn render_impl(&self, openmetrics: bool) -> String {
         let mut out = String::new();
         let fams = self.families.read().unwrap();
         for (name, fam) in fams.iter() {
-            let _ = writeln!(out, "# HELP {name} {}", escape_help(&fam.help));
-            let _ = writeln!(out, "# TYPE {name} {}", fam.kind);
+            // OpenMetrics names a counter family without the `_total`
+            // sample suffix.
+            let family = match name.strip_suffix("_total") {
+                Some(stripped) if openmetrics && fam.kind == "counter" => stripped,
+                _ => name.as_str(),
+            };
+            let _ = writeln!(out, "# HELP {family} {}", escape_help(&fam.help));
+            let _ = writeln!(out, "# TYPE {family} {}", fam.kind);
             let mut series: Vec<(&Vec<(String, String)>, &Slot)> = fam.series.iter().collect();
             series.sort_by(|a, b| a.0.cmp(b.0));
             for (key, slot) in series {
@@ -406,6 +432,15 @@ impl MetricsRegistry {
                         let _ = writeln!(out, "{name}{} {}", render_labels(key), g.get());
                     }
                     Slot::H(h) => {
+                        // Exemplars are OpenMetrics-only syntax; a classic
+                        // parser would take the suffix for a timestamp.
+                        let exemplar = |i: usize| {
+                            if openmetrics {
+                                render_exemplar(h.exemplar(i))
+                            } else {
+                                String::new()
+                            }
+                        };
                         let counts = h.bucket_counts();
                         let mut cum = 0u64;
                         for (i, &bound) in h.bounds().iter().enumerate() {
@@ -417,7 +452,7 @@ impl MetricsRegistry {
                                 out,
                                 "{name}_bucket{} {cum}{}",
                                 render_labels(&with_le),
-                                render_exemplar(h.exemplar(i))
+                                exemplar(i)
                             );
                         }
                         let mut with_le: Vec<(String, String)> = key.clone();
@@ -428,13 +463,16 @@ impl MetricsRegistry {
                             "{name}_bucket{} {}{}",
                             render_labels(&with_le),
                             h.count(),
-                            render_exemplar(h.exemplar(h.bounds().len()))
+                            exemplar(h.bounds().len())
                         );
                         let _ = writeln!(out, "{name}_sum{} {}", render_labels(key), h.sum());
                         let _ = writeln!(out, "{name}_count{} {}", render_labels(key), h.count());
                     }
                 }
             }
+        }
+        if openmetrics {
+            out.push_str("# EOF\n");
         }
         out
     }
@@ -540,18 +578,47 @@ mod tests {
     }
 
     #[test]
-    fn exemplar_lands_on_the_bucket_line() {
+    fn exemplar_lands_on_the_openmetrics_bucket_line() {
         let r = MetricsRegistry::new();
         let h = r.histogram_with_bounds("e_ns", "exemplars", &[], &[10, 100]);
         h.observe_with_exemplar(50, 77);
         assert_eq!(h.exemplar(1), Some(Exemplar { value: 50, span: 77 }));
         assert_eq!(h.exemplar(0), None);
-        let text = r.render();
+        let text = r.render_openmetrics();
         assert!(text.contains("e_ns_bucket{le=\"100\"} 1 # {span_id=\"77\"} 50"), "{text}");
         // +Inf exemplar for an above-all-bounds value
         h.observe_with_exemplar(1000, 78);
-        let text = r.render();
+        let text = r.render_openmetrics();
         assert!(text.contains("e_ns_bucket{le=\"+Inf\"} 2 # {span_id=\"78\"} 1000"), "{text}");
+    }
+
+    #[test]
+    fn classic_render_never_emits_exemplars() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram_with_bounds("c_ns", "classic", &[], &[10, 100]);
+        h.observe_with_exemplar(50, 77);
+        let text = r.render();
+        // The classic text parser reads the exemplar suffix as a
+        // timestamp, so its presence would break a stock Prometheus
+        // scrape of the default /metrics body.
+        assert!(!text.contains("# {"), "{text}");
+        assert!(!text.contains("# EOF"), "{text}");
+        assert!(text.contains("c_ns_bucket{le=\"100\"} 1\n"), "{text}");
+    }
+
+    #[test]
+    fn openmetrics_render_terminates_and_renames_counter_families() {
+        let r = MetricsRegistry::new();
+        r.counter("reqs_total", "requests", &[("op", "x")]).inc();
+        r.gauge("g", "a gauge", &[]).set(4);
+        let text = r.render_openmetrics();
+        assert!(text.ends_with("# EOF\n"), "{text}");
+        // counter family drops `_total`; the sample keeps it
+        assert!(text.contains("# HELP reqs requests\n"), "{text}");
+        assert!(text.contains("# TYPE reqs counter\n"), "{text}");
+        assert!(text.contains("reqs_total{op=\"x\"} 1\n"), "{text}");
+        // gauges keep their name on every line
+        assert!(text.contains("# TYPE g gauge\n"), "{text}");
     }
 
     #[test]

@@ -12,10 +12,12 @@
 //!   and on panic ([`install_panic_hook`]).
 //!
 //! Both are also reachable over plain HTTP: [`http::ObsHttpServer`] serves
-//! `GET /metrics` (with OpenMetrics exemplars linking histogram buckets to
-//! recorder span ids), `GET /trace`, and `GET /healthz`, so stock
-//! Prometheus can scrape a pool started with `PoolConfig::metrics_listen`
-//! (or via the `emucxl stats --listen` wire-protocol bridge).
+//! `GET /metrics` (classic Prometheus text, or — for clients that
+//! `Accept: application/openmetrics-text` — OpenMetrics with exemplars
+//! linking histogram buckets to recorder span ids), `GET /trace`, and
+//! `GET /healthz`, so stock Prometheus can scrape a pool started with
+//! `PoolConfig::metrics_listen` (or via the `emucxl stats --listen`
+//! wire-protocol bridge).
 //!
 //! Correlation uses a thread-local `(span, tenant)` context: the
 //! coordinator opens a fresh span per wire request ([`span`]); library

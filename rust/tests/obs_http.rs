@@ -42,6 +42,23 @@ fn http_get(addr: SocketAddr, target: &str) -> (String, String) {
     (head.to_string(), body.to_string())
 }
 
+/// Same, negotiating OpenMetrics the way Prometheus does when exemplar
+/// scraping is enabled.
+fn http_get_openmetrics(addr: SocketAddr, target: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).expect("connect to obs plane");
+    write!(
+        s,
+        "GET {target} HTTP/1.1\r\nHost: emucxl\r\n\
+         Accept: application/openmetrics-text; version=1.0.0; charset=utf-8\r\n\
+         Connection: close\r\n\r\n"
+    )
+    .unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").expect("head/body split");
+    (head.to_string(), body.to_string())
+}
+
 /// Every span id carried by an exemplar-annotated bucket line.
 fn exemplar_spans(metrics: &str) -> Vec<u64> {
     metrics
@@ -98,15 +115,29 @@ fn scrape_resolves_exemplars_and_exports_link_utilization() {
     assert!(head.starts_with("HTTP/1.1 200"), "{head}");
     assert_eq!(body, "ok\n");
 
+    // Default scrape: classic Prometheus text. No exemplar syntax — the
+    // classic parser reads it as a timestamp and rejects the scrape.
     let (head, metrics) = http_get(http, "/metrics");
     assert!(head.starts_with("HTTP/1.1 200"), "{head}");
     assert!(head.contains("Content-Type: text/plain; version=0.0.4"), "{head}");
+    assert!(!metrics.contains("# {"), "exemplar leaked into text/plain:\n{metrics}");
     // per-node link-utilization gauges, derived from window occupancy
     assert!(metrics.contains("# TYPE emucxl_link_utilization gauge"), "{metrics}");
     assert!(
         metrics.contains("emucxl_link_utilization{node=\"1\"}"),
         "remote node must export a utilization gauge:\n{metrics}"
     );
+    for line in metrics.lines() {
+        assert_metric_line(line);
+    }
+
+    // Negotiated scrape: OpenMetrics carries the exemplars and must
+    // terminate with # EOF.
+    let (head, metrics) = http_get_openmetrics(http, "/metrics");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("Content-Type: application/openmetrics-text; version=1.0.0"), "{head}");
+    assert!(metrics.ends_with("# EOF\n"), "{metrics}");
+    assert!(metrics.contains("emucxl_link_utilization{node=\"1\"}"), "{metrics}");
     for line in metrics.lines() {
         assert_metric_line(line);
     }
@@ -166,13 +197,46 @@ fn stats_bridge_proxies_a_daemon_without_http_plane() {
     let (head, body) = http_get(bridge.addr(), "/metrics");
     assert!(head.starts_with("HTTP/1.1 200"), "{head}");
     assert!(body.contains("# TYPE emucxl_coordinator_requests_total counter"), "{body}");
+    assert!(!body.contains("# {"), "exemplar leaked into text/plain:\n{body}");
     for line in body.lines() {
         assert_metric_line(line);
     }
 
+    // OpenMetrics negotiation crosses the bridge too (MetricsOm frame)
+    let (head, body) = http_get_openmetrics(bridge.addr(), "/metrics");
+    assert!(head.contains("Content-Type: application/openmetrics-text"), "{head}");
+    assert!(body.ends_with("# EOF\n"), "{body}");
+    assert!(body.contains("# TYPE emucxl_coordinator_requests counter"), "{body}");
+
     let (head, trace) = http_get(bridge.addr(), "/trace?max=3");
     assert!(head.starts_with("HTTP/1.1 200"), "{head}");
     assert!(trace.lines().count() <= 3, "bridge must forward the max cap");
+
+    // ?span=&max= through the bridge must filter by span BEFORE capping,
+    // like the in-process plane: a span that is not among the newest
+    // events overall still yields its events under a small max.
+    fn span_of(line: &str) -> u64 {
+        let (_, rest) = line.split_once("\"span\":").unwrap();
+        rest.split_once(',').unwrap().0.parse().unwrap()
+    }
+    let (_, full) = http_get(bridge.addr(), "/trace");
+    let newest = span_of(full.lines().last().expect("trace has events"));
+    // Walk back from the newest event so the chosen span cannot be
+    // evicted from the ring by tests running concurrently in this
+    // process before the filtered request lands.
+    let older = full
+        .lines()
+        .rev()
+        .map(span_of)
+        .find(|&s| s != newest)
+        .expect("an older span distinct from the newest event's span");
+    let (_, filtered) = http_get(bridge.addr(), &format!("/trace?span={older}&max=1"));
+    assert_eq!(
+        filtered.lines().count(),
+        1,
+        "span filter must apply before the max cap:\n{filtered}"
+    );
+    assert!(filtered.contains(&format!("\"span\":{older},")), "{filtered}");
 
     let (head, _) = http_get(bridge.addr(), "/healthz");
     assert!(head.starts_with("HTTP/1.1 200"), "{head}");
@@ -228,8 +292,16 @@ fn concurrent_scrapes_race_writers_without_tearing() {
     let scrapers: Vec<_> = (0..SCRAPERS)
         .map(|_| {
             std::thread::spawn(move || {
-                for _ in 0..SCRAPES {
-                    let (head, metrics) = http_get(http, "/metrics");
+                for i in 0..SCRAPES {
+                    // alternate formats: classic must stay exemplar-free
+                    // while OpenMetrics races the exemplar slots
+                    let (head, metrics) = if i % 2 == 0 {
+                        http_get_openmetrics(http, "/metrics")
+                    } else {
+                        let got = http_get(http, "/metrics");
+                        assert!(!got.1.contains("# {"), "exemplar in text/plain:\n{}", got.1);
+                        got
+                    };
                     assert!(head.starts_with("HTTP/1.1 200"), "{head}");
                     for line in metrics.lines() {
                         assert_metric_line(line);
