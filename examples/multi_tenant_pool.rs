@@ -41,9 +41,12 @@ fn main() -> emucxl::Result<()> {
         emucxl: emucxl_cfg,
         kv_local_capacity: 300,
         kv_policy: GetPolicy::Promote,
+        kv_shards: 8,
         batch: 64,
         max_wait: Duration::from_micros(200),
         trace_dump: None,
+        recorder_capacity: None,
+        metrics_listen: None,
     };
     let srv = PoolServer::start(cfg, 0)?;
     let addr = srv.addr();

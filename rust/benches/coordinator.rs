@@ -25,6 +25,7 @@ fn run_scale(tenants: usize, artifacts: Option<std::path::PathBuf>) -> (f64, f64
         emucxl: emucxl_cfg,
         kv_local_capacity: 300,
         kv_policy: GetPolicy::Promote,
+        kv_shards: 8,
         batch: 64,
         max_wait: Duration::from_micros(200),
         trace_dump: None,

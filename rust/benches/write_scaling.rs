@@ -1,0 +1,130 @@
+//! Write-path scaling: the concurrent `&self` write path (RwLock read
+//! guard, disjoint writers in parallel) against the exclusive-lock
+//! discipline that serialized every write, at 1..8 writer threads.
+//!
+//! Before the refactor `EmucxlContext::write` took `&mut self`, so the
+//! pool coordinator had to hold the exclusive ctx lock for every WRITE —
+//! disjoint tenants serialized no matter how many cores were available.
+//! Now writes take `&self` (the device serializes per touched node arena)
+//! and the coordinator issues them under the ctx *read* lock. This bench
+//! quantifies the difference; each thread writes its own allocations,
+//! spread across both nodes, so writers never contend on an arena.
+//!
+//! Run: `cargo bench --bench write_scaling`
+//! The table is also recorded as `benches/baselines/write_scaling.json`;
+//! regenerate that file by pasting a fresh run's numbers.
+
+mod common;
+
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use common::section;
+use emucxl::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
+use emucxl::config::EmucxlConfig;
+use emucxl::mem::vaspace::VAddr;
+
+const ALLOCS_PER_THREAD: usize = 2;
+const ALLOC_SIZE: usize = 4096;
+const WRITES_PER_THREAD: usize = 4_000;
+const WRITE_LEN: usize = 4096;
+const MAX_THREADS: usize = 8;
+
+/// One context with `ALLOCS_PER_THREAD` disjoint allocations per thread,
+/// alternating nodes so thread `t` lands on node `t % 2`.
+fn ctx_with_slots() -> (EmucxlContext, Vec<Vec<VAddr>>) {
+    let mut ctx = EmucxlContext::init(EmucxlConfig::sized(64 << 20, 256 << 20)).unwrap();
+    let slots: Vec<Vec<VAddr>> = (0..MAX_THREADS)
+        .map(|t| {
+            let node = if t % 2 == 0 { NODE_LOCAL } else { NODE_REMOTE };
+            (0..ALLOCS_PER_THREAD)
+                .map(|_| ctx.alloc(ALLOC_SIZE, node).unwrap())
+                .collect()
+        })
+        .collect();
+    (ctx, slots)
+}
+
+/// Baseline: every write takes the exclusive lock (pre-refactor behavior).
+fn run_exclusive(threads: usize) -> f64 {
+    let (ctx, slots) = ctx_with_slots();
+    let ctx = Arc::new(Mutex::new(ctx));
+    let wall = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let ctx = Arc::clone(&ctx);
+            let mine = slots[t].clone();
+            std::thread::spawn(move || {
+                let data = vec![0xCDu8; WRITE_LEN];
+                for i in 0..WRITES_PER_THREAD {
+                    let a = mine[i % mine.len()];
+                    ctx.lock().unwrap().write(a, &data).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (threads * WRITES_PER_THREAD) as f64 / wall.elapsed().as_secs_f64()
+}
+
+/// The refactored path: disjoint writers share the ctx read lock, the
+/// device's per-node arena locks are the only serialization point.
+fn run_concurrent(threads: usize) -> f64 {
+    let (ctx, slots) = ctx_with_slots();
+    let ctx = Arc::new(RwLock::new(ctx));
+    let wall = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let ctx = Arc::clone(&ctx);
+            let mine = slots[t].clone();
+            std::thread::spawn(move || {
+                let data = vec![0xCDu8; WRITE_LEN];
+                for i in 0..WRITES_PER_THREAD {
+                    let a = mine[i % mine.len()];
+                    ctx.read().unwrap().write(a, &data).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (threads * WRITES_PER_THREAD) as f64 / wall.elapsed().as_secs_f64()
+}
+
+fn main() {
+    section("write throughput scaling: exclusive lock (old) vs shared lock (new)");
+    println!(
+        "{:<10} {:>18} {:>18} {:>10}",
+        "threads", "exclusive ops/s", "concurrent ops/s", "speedup"
+    );
+    let mut rows = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let ex = run_exclusive(threads);
+        let co = run_concurrent(threads);
+        println!("{threads:<10} {ex:>18.0} {co:>18.0} {:>9.2}x", co / ex);
+        rows.push((threads, ex, co));
+    }
+    println!("\n(disjoint writers: each thread owns its allocations; node = thread % 2)");
+
+    // Emit the baseline JSON body so a fresh run can be pasted into
+    // benches/baselines/write_scaling.json verbatim.
+    println!("\nbaseline JSON (paste into benches/baselines/write_scaling.json):");
+    println!("{{");
+    println!("  \"bench\": \"write_scaling\",");
+    println!(
+        "  \"config\": {{\"allocs_per_thread\": {ALLOCS_PER_THREAD}, \"alloc_size\": {ALLOC_SIZE}, \"writes_per_thread\": {WRITES_PER_THREAD}}},"
+    );
+    println!("  \"rows\": [");
+    for (i, (threads, ex, co)) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        println!(
+            "    {{\"threads\": {threads}, \"exclusive_ops_s\": {ex:.0}, \"concurrent_ops_s\": {co:.0}, \"speedup\": {:.2}}}{comma}",
+            co / ex
+        );
+    }
+    println!("  ]");
+    println!("}}");
+}

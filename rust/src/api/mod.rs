@@ -338,8 +338,13 @@ impl EmucxlContext {
         self.read(addr.offset(offset as u64), buf)
     }
 
-    /// `emucxl_write(buf, 0, addr, buf.len())`.
-    pub fn write(&mut self, addr: VAddr, data: &[u8]) -> Result<f32> {
+    /// `emucxl_write(buf, 0, addr, buf.len())`. Takes `&self` — writes are
+    /// concurrent too: the device serializes only on the page table
+    /// (briefly, shared) and the touched node's arena, so writers to
+    /// different nodes proceed fully in parallel and writers to the same
+    /// node serialize only the data movement itself. Structural mutation
+    /// (`alloc`/`free`/`resize`/`migrate`) still requires `&mut self`.
+    pub fn write(&self, addr: VAddr, data: &[u8]) -> Result<f32> {
         let _op = obs::enter_op();
         let t0 = self.now_ns();
         let r = self.write_inner(addr, data);
@@ -347,19 +352,21 @@ impl EmucxlContext {
         r
     }
 
-    fn write_inner(&mut self, addr: VAddr, data: &[u8]) -> Result<f32> {
+    fn write_inner(&self, addr: VAddr, data: &[u8]) -> Result<f32> {
         self.fd()?;
         let path = self.device.write(addr, data)?;
         Ok(self.charge(Op::Write, path, data.len()))
     }
 
     /// `emucxl_write` with an explicit offset from `addr`.
-    pub fn write_at(&mut self, addr: VAddr, offset: usize, data: &[u8]) -> Result<f32> {
+    pub fn write_at(&self, addr: VAddr, offset: usize, data: &[u8]) -> Result<f32> {
         self.write(addr.offset(offset as u64), data)
     }
 
     /// `emucxl_memset(addr, value, len)` — paper contract: fill with 0 or -1.
-    pub fn memset(&mut self, addr: VAddr, value: i32, len: usize) -> Result<f32> {
+    /// `&self` like [`EmucxlContext::write`]: fills ride the same
+    /// per-node-serialized device path.
+    pub fn memset(&self, addr: VAddr, value: i32, len: usize) -> Result<f32> {
         self.fd()?;
         let byte = match value {
             0 => 0x00u8,
@@ -372,7 +379,7 @@ impl EmucxlContext {
 
     /// `emucxl_memcpy(dst, src, len)` — non-overlapping copy (overlap is
     /// undefined in libc; here it is rejected to catch bugs early).
-    pub fn memcpy(&mut self, dst: VAddr, src: VAddr, len: usize) -> Result<f32> {
+    pub fn memcpy(&self, dst: VAddr, src: VAddr, len: usize) -> Result<f32> {
         if len == 0 {
             return Ok(0.0);
         }
@@ -387,14 +394,14 @@ impl EmucxlContext {
     }
 
     /// `emucxl_memmove(dst, src, len)` — overlap-safe copy.
-    pub fn memmove(&mut self, dst: VAddr, src: VAddr, len: usize) -> Result<f32> {
+    pub fn memmove(&self, dst: VAddr, src: VAddr, len: usize) -> Result<f32> {
         if len == 0 {
             return Ok(0.0);
         }
         self.copy_impl(dst, src, len)
     }
 
-    fn copy_impl(&mut self, dst: VAddr, src: VAddr, len: usize) -> Result<f32> {
+    fn copy_impl(&self, dst: VAddr, src: VAddr, len: usize) -> Result<f32> {
         self.fd()?;
         let (rp, wp) = self.device.copy(dst, src, len)?;
         let read_ns = self.charge(Op::Read, rp, len);

@@ -9,26 +9,36 @@
 //! # Threading model
 //!
 //! Thread-per-connection for request handling. The pool state is split
-//! into three independently locked pieces instead of one global mutex:
+//! into independently locked pieces instead of one global mutex:
 //!
 //! * `tenants: Mutex<TenantTable>` — registration, quota accounting,
 //!   ownership checks. Held briefly; never across a data access.
-//! * `ctx: RwLock<EmucxlContext>` — the emulated appliance. **Reads take
-//!   the read lock**: `EmucxlContext::read`, `is_local`, `stats` and the
-//!   KV in-place GET path all work through `&self` (the virtual clock is
-//!   an atomic, telemetry counters are atomics, and the device shards its
-//!   page storage behind per-node locks), so any number of tenants read
-//!   concurrently. Writes, allocs, frees, migrates and KV promotions take
-//!   the write lock.
-//! * `kv: Mutex<KvStore>` — the KV index/LRU metadata. GETs that don't
-//!   promote run with `kv` + the ctx *read* lock; promotion bounces to
-//!   the exclusive path ([`SharedGet::NeedsExclusive`]).
+//! * `ctx: RwLock<EmucxlContext>` — the emulated appliance. **Reads AND
+//!   writes take the read lock**: `EmucxlContext::{read,write}`,
+//!   `is_local`, `stats` and the KV shared GET path all work through
+//!   `&self` (the virtual clock is an atomic, telemetry counters are
+//!   atomics, and the device shards its page storage behind a
+//!   `RwLock<PageTable>` plus per-node `RwLock<NodeArena>`s), so disjoint
+//!   readers and writers proceed in parallel end to end — two writers
+//!   serialize only when they touch the same node's arena, and then only
+//!   for the data movement itself. The exclusive write lock is reserved
+//!   for *structural* mutation: alloc, free, resize, migrate, and KV
+//!   promotion/eviction (which migrate objects between nodes).
+//! * `kv: ShardedKvStore` — N independent `Mutex<KvStore>` shards keyed
+//!   by key hash, each owning a slice of the LRU/eviction budget. GETs
+//!   that don't promote run with the ctx *read* lock + one shard lock, so
+//!   GETs/PUTs on different shards never contend with each other;
+//!   promotion bounces to the exclusive path
+//!   ([`SharedGet::NeedsExclusive`]).
 //!
-//! **Lock order: tenants → ctx → kv.** Any handler taking more than one
-//! of these locks must acquire them in that order (and may release early);
-//! never acquire a lower lock while holding a higher one in reverse.
+//! **Lock order: tenants → ctx → pagetable/arenas (inside the device) →
+//! kv-shard.** Any handler taking more than one of these locks must
+//! acquire them in that order (and may release early); never acquire a
+//! lower lock while holding a higher one in reverse. At most one kv-shard
+//! lock is ever held at a time (a key maps to exactly one shard).
 //! `record_request` and `now_ns` take no pool lock at all — virtual time
-//! comes from a shared atomic clock handle.
+//! comes from a shared atomic clock handle. See `docs/concurrency.md` for
+//! the full walkthrough.
 //!
 //! Latency pricing is pushed OUT of every lock onto the dynamic
 //! [`TimingBatcher`], which batches concurrent tenants' descriptors into
@@ -54,7 +64,7 @@ use crate::coordinator::proto::{read_frame, write_frame, Request, Response};
 use crate::coordinator::tenant::TenantTable;
 use crate::error::{EmucxlError, Result};
 use crate::mem::vaspace::VAddr;
-use crate::middleware::kv::{GetPolicy, KvStore, SharedGet};
+use crate::middleware::kv::{GetPolicy, ShardedKvStore, SharedGet};
 use crate::obs::http::{ObsHttpServer, ObsSource};
 use crate::obs::{self, Subsystem};
 use crate::timing::clock::VirtualClock;
@@ -67,6 +77,10 @@ pub struct PoolConfig {
     /// Local-object capacity of the shared KV store.
     pub kv_local_capacity: usize,
     pub kv_policy: GetPolicy,
+    /// Number of independent KV index shards (clamped to
+    /// `[1, kv_local_capacity]`); GETs/PUTs on different shards never
+    /// contend. 1 reproduces the old single-lock behaviour exactly.
+    pub kv_shards: usize,
     /// Batch threshold of the timing batcher.
     pub batch: usize,
     /// Max time a descriptor waits for its batch to fill.
@@ -90,6 +104,7 @@ impl Default for PoolConfig {
             emucxl: EmucxlConfig::default(),
             kv_local_capacity: 300,
             kv_policy: GetPolicy::Promote,
+            kv_shards: 8,
             batch: 64,
             max_wait: Duration::from_micros(200),
             trace_dump: None,
@@ -99,12 +114,14 @@ impl Default for PoolConfig {
     }
 }
 
-/// The pool's shared state: three locks (see the module docs for the
-/// locking discipline) plus lock-free companions.
+/// The pool's shared state: split locks (see the module docs for the
+/// locking discipline) plus lock-free companions. The KV store is
+/// internally sharded — its methods are `&self` and each takes only the
+/// addressed key's shard lock.
 struct SharedPool {
     tenants: Mutex<TenantTable>,
     ctx: RwLock<EmucxlContext>,
-    kv: Mutex<KvStore>,
+    kv: ShardedKvStore,
     /// Same clock the context's timing engine advances — lock-free
     /// `now_ns` for timestamps and monotonicity checks.
     clock: Arc<VirtualClock>,
@@ -179,7 +196,11 @@ impl PoolServer {
         let shared = Arc::new(SharedPool {
             tenants: Mutex::new(TenantTable::new()),
             ctx: RwLock::new(ctx),
-            kv: Mutex::new(KvStore::new(config.kv_local_capacity, config.kv_policy)),
+            kv: ShardedKvStore::new(
+                config.kv_local_capacity,
+                config.kv_policy,
+                config.kv_shards,
+            ),
             clock,
             batcher,
             stop: AtomicBool::new(false),
@@ -629,9 +650,14 @@ fn handle_request(
         }
         Request::Write { addr, data } => {
             let id = tenant_id.unwrap();
+            // The disjoint-writer path: ctx READ lock only, like Read.
+            // `EmucxlContext::write` is `&self` — the device serializes
+            // per touched node arena, so writers to different allocations
+            // or nodes proceed in parallel; structural mutation (alloc/
+            // free/migrate) is excluded by its need for the write lock.
             let node = {
                 let tenants = shared.tenants.lock().unwrap();
-                let mut ctx = shared.ctx.write().unwrap();
+                let ctx = shared.ctx.read().unwrap();
                 let node = match check_access(&tenants, &ctx, id, addr, data.len()) {
                     Ok(n) => n,
                     Err(e) => return err_resp(&e),
@@ -704,9 +730,10 @@ fn handle_request(
         Request::KvPut { key, value } => {
             let vlen = value.len();
             {
+                // PUT allocates (and may evict = migrate), so it needs the
+                // exclusive ctx lock; the store locks only the key's shard.
                 let mut ctx = shared.ctx.write().unwrap();
-                let mut kv = shared.kv.lock().unwrap();
-                if let Err(e) = kv.put(&mut ctx, &key, &value) {
+                if let Err(e) = shared.kv.put(&mut ctx, &key, &value) {
                     return err_resp(&e);
                 }
             }
@@ -716,23 +743,24 @@ fn handle_request(
             Response::Ok { lat_ns: lat }
         }
         Request::KvGet { key } => {
-            // Try the shared path first: ctx read lock + kv lock. Only a
-            // GET that must promote (move data between nodes) retries
-            // under the exclusive ctx lock.
+            // Try the shared path first: ctx read lock + the key's shard
+            // lock, so GETs on different shards never contend. Only a GET
+            // that must promote (move data between nodes) retries under
+            // the exclusive ctx lock. `tier_of` and `get_shared` take the
+            // shard lock separately, but the tier is stable in between:
+            // any tier move (promotion/eviction) needs the exclusive ctx
+            // lock, which our read guard excludes.
             let (value, remote) = {
                 let ctx = shared.ctx.read().unwrap();
-                let mut kv = shared.kv.lock().unwrap();
-                let remote = kv.tier_of(&key) == Some("remote");
-                match kv.get_shared(&ctx, &key) {
+                let remote = shared.kv.tier_of(&key) == Some("remote");
+                match shared.kv.get_shared(&ctx, &key) {
                     Ok(SharedGet::Done(v)) => (v, remote),
                     Ok(SharedGet::NeedsExclusive) => {
-                        drop(kv);
                         drop(ctx);
                         let mut ctx = shared.ctx.write().unwrap();
-                        let mut kv = shared.kv.lock().unwrap();
                         // A racing delete between the two acquisitions is
                         // fine: get() reports a miss.
-                        match kv.get(&mut ctx, &key) {
+                        match shared.kv.get(&mut ctx, &key) {
                             Ok(v) => (v, remote),
                             Err(e) => return err_resp(&e),
                         }
@@ -748,9 +776,9 @@ fn handle_request(
         }
         Request::KvDelete { key } => {
             let existed = {
+                // DELETE frees emucxl memory, so exclusive ctx lock.
                 let mut ctx = shared.ctx.write().unwrap();
-                let mut kv = shared.kv.lock().unwrap();
-                match kv.delete(&mut ctx, &key) {
+                match shared.kv.delete(&mut ctx, &key) {
                     Ok(v) => v,
                     Err(e) => return err_resp(&e),
                 }

@@ -49,24 +49,33 @@
 //!
 //! ## Concurrency
 //!
-//! The data **read path is `&self`** end to end: `EmucxlContext::read`,
-//! `read_at`, `is_local`, `get_numa_node`, `get_size`, `stats` and
-//! `now_ns` all take shared references. Underneath, the virtual clock is
-//! a single atomic (48.16 fixed-point, CAS-free `fetch_add`), telemetry
-//! uses atomic counters with short per-class histogram mutexes, the
-//! device shards its page storage behind per-node `RwLock`s, and the CXL
-//! controller model takes a brief write lock only for its queue-estimate
-//! updates. `EmucxlContext` is therefore `Send + Sync`: wrap it in an
-//! `Arc<RwLock<_>>` and any number of threads may read concurrently under
-//! the *read* lock, while alloc/free/write/migrate keep exclusive `&mut`
-//! semantics under the write lock.
+//! The data **read and write paths are `&self`** end to end:
+//! `EmucxlContext::read`, `read_at`, `write`, `write_at`, `memset`,
+//! `memcpy`, `memmove`, `is_local`, `get_numa_node`, `get_size`, `stats`
+//! and `now_ns` all take shared references. Underneath, the virtual
+//! clock is a single atomic (48.16 fixed-point, CAS-free `fetch_add`),
+//! telemetry uses atomic counters with short per-class histogram
+//! mutexes, and the device shards its page storage behind per-node
+//! `RwLock`s — a write grabs the pagetable read lock plus the *write*
+//! lock of the one node arena it touches, so writers to different nodes
+//! (and readers anywhere else) proceed in parallel and two writers only
+//! serialize when they hit the same node arena. The CXL controller model
+//! takes a brief write lock for its queue-estimate updates.
+//! `EmucxlContext` is therefore `Send + Sync`: wrap it in an
+//! `Arc<RwLock<_>>` and any number of threads may read *and write*
+//! concurrently under the **read** lock, while structural mutation —
+//! alloc/free/resize/migrate — keeps exclusive `&mut` semantics under
+//! the write lock.
 //!
 //! The pool coordinator ([`coordinator::server`]) builds on this with
-//! three split locks — tenants, ctx, kv — acquired in exactly that order
-//! (**tenants → ctx → kv**); see its module docs for the per-request
-//! locking discipline. Single-threaded callers observe the exact same
-//! virtual-time accounting as before the clock became atomic, which is
-//! what keeps the sequence/xla-parity tests deterministic.
+//! split locks acquired in exactly this order: **tenants → ctx →
+//! pagetable/arenas (inside the device) → kv-shard**. The KV store is
+//! sharded by key hash into independent mutexes
+//! ([`middleware::kv::ShardedKvStore`]), at most one of which is held at
+//! a time; see the server module docs and `docs/concurrency.md` for the
+//! per-request locking discipline. Single-threaded callers observe the
+//! exact same virtual-time accounting as before the clock became atomic,
+//! which is what keeps the sequence/xla-parity tests deterministic.
 //!
 //! ## Quickstart
 //!

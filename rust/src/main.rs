@@ -8,10 +8,12 @@
 //! emucxl table3 [--ops N --trials T]  paper Table III (queue)
 //! emucxl table4 [--gets N]            paper Table IV (KV policies)
 //! emucxl serve [--port P] [--artifacts DIR] [--trace-dump FILE] [--no-warmup]
-//!              [--metrics-listen PORT]
+//!              [--metrics-listen PORT] [--kv-shards N]
 //!                                     pool coordinator daemon
 //! emucxl stats [--host H --port P] [--raw] [--trace N] [--listen PORT]
 //!                                     metrics/trace of a running daemon
+//! emucxl soak [--host H --port P --writers N --iters N --bytes N]
+//!                                     multi-writer soak against a daemon
 //! emucxl replay --trace FILE [--artifacts DIR] trace through window model
 //! emucxl calibrate --local NS --remote NS [--artifacts DIR]
 //! ```
@@ -186,6 +188,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(v) = flags.get("metrics-listen") {
         cfg.metrics_listen = Some(listen_port(v, "metrics-listen")?);
     }
+    cfg.kv_shards = get(flags, "kv-shards", cfg.kv_shards);
     if !flags.contains_key("no-warmup") {
         warmup()?;
     }
@@ -199,6 +202,82 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Multi-writer soak against a live daemon: N writer tenants, each with a
+/// private allocation spread across both nodes, hammer disjoint writes and
+/// verify readback. Exits non-zero on any corruption or wire error — the
+/// CI scrape-smoke job runs this against `emucxl serve` to exercise the
+/// concurrent write path end to end in a real process.
+fn cmd_soak(flags: &HashMap<String, String>) -> Result<()> {
+    let host = flags.get("host").cloned().unwrap_or_else(|| "127.0.0.1".into());
+    let port = get(flags, "port", 7117u16);
+    let writers: u32 = get(flags, "writers", 4);
+    let iters: u32 = std::cmp::max(get(flags, "iters", 200), 1);
+    let bytes: usize = std::cmp::max(get(flags, "bytes", 4096), 1);
+    let addr: std::net::SocketAddr = format!("{host}:{port}").parse().map_err(|_| {
+        emucxl::error::EmucxlError::InvalidArgument(format!("bad --host {host}"))
+    })?;
+
+    let wall = std::time::Instant::now();
+    let handles: Vec<_> = (0..writers)
+        .map(|t| {
+            std::thread::spawn(move || -> Result<()> {
+                let quota = (bytes as u64).saturating_mul(4);
+                let mut c = PoolClient::connect(addr, quota)?;
+                // Spread writers across both nodes so disjoint writes
+                // exercise per-node parallelism, not just lock fairness.
+                let (base, _) = c.alloc(bytes as u64, t % 2)?;
+                let mut expect = Vec::new();
+                for i in 0..iters {
+                    let tag =
+                        (t as u8).wrapping_mul(31).wrapping_add(i as u8).wrapping_add(1);
+                    expect = vec![tag; bytes];
+                    c.write(base, &expect)?;
+                    if i % 16 == 0 {
+                        let (data, _) = c.read(base, bytes as u32)?;
+                        if data != expect {
+                            return Err(emucxl::error::EmucxlError::Protocol(format!(
+                                "writer {t}: corrupt readback at iter {i}"
+                            )));
+                        }
+                    }
+                }
+                let (data, _) = c.read(base, bytes as u32)?;
+                if data != expect {
+                    return Err(emucxl::error::EmucxlError::Protocol(format!(
+                        "writer {t}: corrupt final readback"
+                    )));
+                }
+                c.free(base)?;
+                c.bye()
+            })
+        })
+        .collect();
+
+    let mut failed = false;
+    for (t, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                eprintln!("soak: writer {t} failed: {e}");
+                failed = true;
+            }
+            Err(_) => {
+                eprintln!("soak: writer {t} panicked");
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        return Err(emucxl::error::EmucxlError::Protocol("soak failed".into()));
+    }
+    let total = u64::from(writers) * u64::from(iters);
+    println!(
+        "soak OK: {writers} writers x {iters} iters ({total} writes of {bytes} B) in {:.2?}",
+        wall.elapsed()
+    );
+    Ok(())
 }
 
 fn cmd_stats(flags: &HashMap<String, String>) -> Result<()> {
@@ -510,12 +589,15 @@ commands:
   table3 [--ops N --trials T]   paper Table III (queue)
   table4 [--gets N]             paper Table IV (KV policies)
   serve [--port P] [--artifacts DIR] [--trace-dump FILE] [--no-warmup]
-        [--metrics-listen PORT]
+        [--metrics-listen PORT] [--kv-shards N]
                                 pool coordinator daemon; --metrics-listen
                                 serves /metrics, /trace, /healthz over HTTP
   stats [--host H --port P] [--raw] [--trace N] [--listen PORT]
                                 metrics/trace of a running daemon;
                                 --listen runs a persistent scrape bridge
+  soak [--host H --port P] [--writers N] [--iters N] [--bytes N]
+                                multi-writer soak against a running daemon:
+                                disjoint writes + readback verification
   replay --trace FILE [--artifacts DIR]
                                 trace through the window model
   calibrate --local NS --remote NS [--artifacts DIR]
@@ -545,6 +627,7 @@ fn main() {
         "table4" => cmd_table4(&flags),
         "serve" => cmd_serve(&flags),
         "stats" => cmd_stats(&flags),
+        "soak" => cmd_soak(&flags),
         "replay" => cmd_replay(&flags),
         "calibrate" => cmd_calibrate(&flags),
         _ => usage(),

@@ -8,8 +8,10 @@
 
 pub mod lru;
 pub mod policy;
+pub mod sharded;
 pub mod store;
 
 pub use lru::LruList;
 pub use policy::GetPolicy;
+pub use sharded::ShardedKvStore;
 pub use store::{KvStats, KvStore, SharedGet};

@@ -1,0 +1,302 @@
+//! Sharded KV index: N independent [`KvStore`] shards behind their own
+//! mutexes, keyed by key hash, so GETs/PUTs touching different shards
+//! never contend on a lock.
+//!
+//! Each shard owns its slice of the LRU/eviction policy with a per-shard
+//! capacity budget: the global local capacity is split evenly across
+//! shards (the first `capacity % shards` shards get one extra slot), so
+//! the sum of shard budgets equals the configured capacity and the global
+//! local object count can never exceed it. The trade-off is slack *within*
+//! a shard: a hot shard evicts at its own budget even while a cold shard
+//! has free slots, so occupancy can sit below the global capacity by up to
+//! one shard's budget — the classic sharded-cache deal, accepted here for
+//! lock-free-across-shards placement decisions.
+//!
+//! All methods are `&self`; callers pick the context lock strength per
+//! operation (shared for GET, exclusive for anything that migrates or
+//! allocates) exactly as with a single [`KvStore`].
+
+use std::sync::{Mutex, MutexGuard};
+
+use crate::api::EmucxlContext;
+use crate::error::Result;
+use crate::middleware::kv::policy::GetPolicy;
+use crate::middleware::kv::store::{KvStats, KvStore, SharedGet};
+
+/// FNV-1a 64-bit: deterministic, allocation-free, and well distributed
+/// for the short keys KV workloads use. Stable across runs so shard
+/// placement is reproducible in tests.
+fn fnv1a(key: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// N independent `Mutex<KvStore>` shards keyed by FNV-1a key hash.
+#[derive(Debug)]
+pub struct ShardedKvStore {
+    shards: Vec<Mutex<KvStore>>,
+}
+
+impl ShardedKvStore {
+    /// `local_capacity` is the *global* local-object budget, split across
+    /// `shards` shards. The shard count is clamped to `[1, local_capacity]`
+    /// so every shard owns at least one local slot (a zero-budget shard
+    /// could never hold anything locally).
+    pub fn new(local_capacity: usize, policy: GetPolicy, shards: usize) -> Self {
+        assert!(local_capacity > 0, "local capacity must be positive");
+        let n = shards.clamp(1, local_capacity);
+        let base = local_capacity / n;
+        let extra = local_capacity % n;
+        let shards = (0..n)
+            .map(|i| {
+                let cap = base + usize::from(i < extra);
+                Mutex::new(KvStore::for_shard(cap, policy, i))
+            })
+            .collect();
+        Self { shards }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard a key routes to (stable across runs).
+    pub fn shard_index(&self, key: &[u8]) -> usize {
+        (fnv1a(key) % self.shards.len() as u64) as usize
+    }
+
+    fn shard(&self, key: &[u8]) -> MutexGuard<'_, KvStore> {
+        self.shards[self.shard_index(key)].lock().unwrap()
+    }
+
+    /// PUT into the key's shard (exclusive context: may alloc + evict).
+    pub fn put(&self, ctx: &mut EmucxlContext, key: &[u8], value: &[u8]) -> Result<()> {
+        self.shard(key).put(ctx, key, value)
+    }
+
+    /// Full GET into the key's shard (exclusive context: may promote).
+    pub fn get(&self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.shard(key).get(ctx, key)
+    }
+
+    /// Shared-path GET: only the key's shard lock is taken, so GETs on
+    /// different shards proceed in parallel. Bounces promotion exactly
+    /// like [`KvStore::get_shared`].
+    pub fn get_shared(&self, ctx: &EmucxlContext, key: &[u8]) -> Result<SharedGet> {
+        self.shard(key).get_shared(ctx, key)
+    }
+
+    /// DELETE from the key's shard (exclusive context: frees memory).
+    pub fn delete(&self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<bool> {
+        self.shard(key).delete(ctx, key)
+    }
+
+    /// Where a key currently lives (diagnostics / tests).
+    pub fn tier_of(&self, key: &[u8]) -> Option<&'static str> {
+        self.shard(key).tier_of(key)
+    }
+
+    /// Summed snapshot across shards. Each shard's snapshot is internally
+    /// consistent; the sum is a moment-in-time aggregate like any scrape.
+    pub fn stats(&self) -> KvStats {
+        let mut total = KvStats::default();
+        for s in &self.shards {
+            total.accumulate(&s.lock().unwrap().stats());
+        }
+        total
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn local_count(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().local_count()).sum()
+    }
+
+    pub fn remote_count(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().remote_count()).sum()
+    }
+
+    /// Sum of per-shard local budgets (== the configured global capacity).
+    pub fn local_capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().local_capacity()).sum()
+    }
+
+    /// Drop every object in every shard.
+    pub fn clear(&self, ctx: &mut EmucxlContext) -> Result<()> {
+        for s in &self.shards {
+            s.lock().unwrap().clear(ctx)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+    use std::sync::{Arc, RwLock};
+
+    use super::*;
+    use crate::config::EmucxlConfig;
+    use crate::util::rng::Rng;
+
+    fn ctx() -> EmucxlContext {
+        EmucxlContext::init(EmucxlConfig::sized(16 << 20, 64 << 20)).unwrap()
+    }
+
+    #[test]
+    fn sharded_store_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ShardedKvStore>();
+    }
+
+    #[test]
+    fn capacity_splits_exactly_across_shards() {
+        let kv = ShardedKvStore::new(10, GetPolicy::InPlace, 4);
+        assert_eq!(kv.num_shards(), 4);
+        assert_eq!(kv.local_capacity(), 10, "shard budgets must sum to the global capacity");
+        // Shard count clamps to the capacity: every shard owns >= 1 slot.
+        let tiny = ShardedKvStore::new(3, GetPolicy::InPlace, 16);
+        assert_eq!(tiny.num_shards(), 3);
+        assert_eq!(tiny.local_capacity(), 3);
+        // Zero shards is treated as one.
+        assert_eq!(ShardedKvStore::new(5, GetPolicy::InPlace, 0).num_shards(), 1);
+    }
+
+    #[test]
+    fn shard_routing_is_stable_and_spread() {
+        let kv = ShardedKvStore::new(64, GetPolicy::InPlace, 8);
+        let mut hit = vec![0usize; kv.num_shards()];
+        for i in 0..256u32 {
+            let key = format!("key-{i}");
+            let s = kv.shard_index(key.as_bytes());
+            assert_eq!(s, kv.shard_index(key.as_bytes()), "routing must be deterministic");
+            hit[s] += 1;
+        }
+        assert!(
+            hit.iter().all(|&n| n > 0),
+            "256 keys over 8 shards should touch every shard: {hit:?}"
+        );
+    }
+
+    #[test]
+    fn put_get_delete_roundtrip_across_shards() {
+        let mut c = ctx();
+        let kv = ShardedKvStore::new(32, GetPolicy::InPlace, 4);
+        for i in 0..20u32 {
+            kv.put(&mut c, format!("k{i}").as_bytes(), format!("v{i}").as_bytes()).unwrap();
+        }
+        assert_eq!(kv.len(), 20);
+        for i in 0..20u32 {
+            let got = kv.get(&mut c, format!("k{i}").as_bytes()).unwrap();
+            assert_eq!(got, Some(format!("v{i}").into_bytes()));
+        }
+        assert!(kv.delete(&mut c, b"k3").unwrap());
+        assert!(!kv.delete(&mut c, b"k3").unwrap());
+        assert_eq!(kv.get(&mut c, b"k3").unwrap(), None);
+        assert_eq!(kv.len(), 19);
+        kv.clear(&mut c).unwrap();
+        assert!(kv.is_empty());
+        assert_eq!(c.live_allocations(), 0, "clear must free emucxl memory");
+    }
+
+    /// Per-shard eviction respects the global budget: the local count never
+    /// exceeds the configured capacity, and after flooding every shard far
+    /// past its slice, occupancy lands exactly on the global capacity.
+    #[test]
+    fn eviction_respects_global_capacity_budget() {
+        let mut c = ctx();
+        const CAP: usize = 32;
+        let kv = ShardedKvStore::new(CAP, GetPolicy::InPlace, 4);
+        for i in 0..400u32 {
+            kv.put(&mut c, format!("flood-{i}").as_bytes(), b"payload").unwrap();
+            assert!(
+                kv.local_count() <= CAP,
+                "local occupancy {} exceeded global budget {CAP} after insert {i}",
+                kv.local_count()
+            );
+        }
+        // 400 keys over 4 shards: every shard saw far more than its ~8-slot
+        // budget, so every shard is full and the sum hits the global cap.
+        assert_eq!(kv.local_count(), CAP, "all shards should be at budget after flooding");
+        assert_eq!(kv.len(), 400);
+        assert_eq!(kv.remote_count(), 400 - CAP);
+        assert_eq!(kv.stats().evictions as usize, 400 - CAP);
+    }
+
+    /// Property test: random put/get/delete interleavings from concurrent
+    /// threads, checked against single-threaded `BTreeMap` oracles. Each
+    /// thread owns a disjoint key prefix, so its slice of the final state
+    /// is deterministic regardless of interleaving — the concurrency
+    /// shakes out lock bugs while the oracle pins down semantics.
+    #[test]
+    fn concurrent_ops_match_btreemap_oracle() {
+        const THREADS: usize = 4;
+        const OPS: usize = 300;
+        let ctx = Arc::new(RwLock::new(ctx()));
+        let kv = Arc::new(ShardedKvStore::new(64, GetPolicy::InPlace, 8));
+
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let ctx = Arc::clone(&ctx);
+                let kv = Arc::clone(&kv);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(0xC0FFEE ^ t as u64);
+                    let mut oracle: BTreeMap<Vec<u8>, Vec<u8>> = BTreeMap::new();
+                    for i in 0..OPS {
+                        let key = format!("t{t}-k{}", rng.below(24)).into_bytes();
+                        match rng.below(3) {
+                            0 => {
+                                let val = format!("t{t}-v{i}").into_bytes();
+                                kv.put(&mut ctx.write().unwrap(), &key, &val).unwrap();
+                                oracle.insert(key, val);
+                            }
+                            1 => {
+                                let want = oracle.get(&key).cloned();
+                                let c = ctx.read().unwrap();
+                                match kv.get_shared(&c, &key).unwrap() {
+                                    SharedGet::Done(got) => assert_eq!(
+                                        got, want,
+                                        "thread {t} op {i}: shared GET diverged from oracle"
+                                    ),
+                                    // InPlace never promotes; the shared
+                                    // path must always complete.
+                                    SharedGet::NeedsExclusive => {
+                                        panic!("InPlace policy bounced to exclusive")
+                                    }
+                                }
+                            }
+                            _ => {
+                                let existed = oracle.remove(&key).is_some();
+                                let deleted = kv.delete(&mut ctx.write().unwrap(), &key).unwrap();
+                                assert_eq!(
+                                    deleted, existed,
+                                    "thread {t} op {i}: DELETE diverged from oracle"
+                                );
+                            }
+                        }
+                    }
+                    oracle
+                })
+            })
+            .collect();
+
+        // Final sweep: every thread's oracle must match the store exactly.
+        let mut c = ctx.write().unwrap();
+        for h in handles {
+            let oracle = h.join().expect("property-test thread panicked");
+            for (key, want) in &oracle {
+                assert_eq!(kv.get(&mut c, key).unwrap().as_ref(), Some(want));
+            }
+        }
+    }
+}

@@ -12,7 +12,8 @@
 //! under remote hits is governed by [`GetPolicy`].
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::api::{EmucxlContext, NODE_LOCAL, NODE_REMOTE};
 use crate::error::{EmucxlError, Result};
@@ -37,7 +38,9 @@ struct Entry {
     token: usize,
     key_len: usize,
     val_len: usize,
-    access_count: u64,
+    /// Lifetime GET count, driving [`GetPolicy::PromoteAfter`]. Atomic so
+    /// the shared (`&self`) GET path can bump it without exclusive access.
+    access_count: AtomicU64,
 }
 
 impl Entry {
@@ -79,6 +82,48 @@ impl KvStats {
             self.local_hits as f64 / self.gets as f64
         }
     }
+
+    /// Fold another snapshot into this one (used to sum per-shard stats).
+    pub fn accumulate(&mut self, other: &KvStats) {
+        self.puts += other.puts;
+        self.gets += other.gets;
+        self.deletes += other.deletes;
+        self.local_hits += other.local_hits;
+        self.remote_hits += other.remote_hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.promotions += other.promotions;
+    }
+}
+
+/// Interior-mutable backing for [`KvStats`] so the shared (`&self`) GET
+/// path can count without exclusive access. Relaxed ordering: counters are
+/// independent monotone tallies, never used to synchronize data.
+#[derive(Debug, Default)]
+struct StatsCells {
+    puts: AtomicU64,
+    gets: AtomicU64,
+    deletes: AtomicU64,
+    local_hits: AtomicU64,
+    remote_hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    promotions: AtomicU64,
+}
+
+impl StatsCells {
+    fn snapshot(&self) -> KvStats {
+        KvStats {
+            puts: self.puts.load(Ordering::Relaxed),
+            gets: self.gets.load(Ordering::Relaxed),
+            deletes: self.deletes.load(Ordering::Relaxed),
+            local_hits: self.local_hits.load(Ordering::Relaxed),
+            remote_hits: self.remote_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            promotions: self.promotions.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// Observability handles mirroring [`KvStats`] into the global registry,
@@ -98,7 +143,14 @@ struct KvObs {
 }
 
 impl KvObs {
-    fn new() -> Self {
+    /// `shard`: when the store is one shard of a [`ShardedKvStore`], the
+    /// object gauges get a `shard` label — gauges are absolute counts, so
+    /// N shards writing one unlabeled series would clobber each other.
+    /// Counters stay unlabeled: the registry dedups by name+labels and
+    /// hands every shard the same `Arc`, so increments aggregate correctly.
+    ///
+    /// [`ShardedKvStore`]: crate::middleware::kv::ShardedKvStore
+    fn new(shard: Option<usize>) -> Self {
         let m = obs::metrics();
         const OPS: &str = "emucxl_kv_ops_total";
         const OPS_HELP: &str = "KV store operations by op";
@@ -106,6 +158,17 @@ impl KvObs {
         const GETS_HELP: &str = "KV GETs by result tier";
         const OBJS: &str = "emucxl_kv_objects";
         const OBJS_HELP: &str = "objects currently held per tier";
+        let shard_label = shard.map(|s| s.to_string());
+        let (objects_local, objects_remote) = match shard_label.as_deref() {
+            Some(s) => (
+                m.gauge(OBJS, OBJS_HELP, &[("tier", "local"), ("shard", s)]),
+                m.gauge(OBJS, OBJS_HELP, &[("tier", "remote"), ("shard", s)]),
+            ),
+            None => (
+                m.gauge(OBJS, OBJS_HELP, &[("tier", "local")]),
+                m.gauge(OBJS, OBJS_HELP, &[("tier", "remote")]),
+            ),
+        };
         Self {
             puts: m.counter(OPS, OPS_HELP, &[("op", "put")]),
             gets: m.counter(OPS, OPS_HELP, &[("op", "get")]),
@@ -123,8 +186,8 @@ impl KvObs {
                 "objects promoted from remote to local memory",
                 &[],
             ),
-            objects_local: m.gauge(OBJS, OBJS_HELP, &[("tier", "local")]),
-            objects_remote: m.gauge(OBJS, OBJS_HELP, &[("tier", "remote")]),
+            objects_local,
+            objects_remote,
         }
     }
 
@@ -135,11 +198,20 @@ impl KvObs {
 }
 
 /// The emucxl-backed key-value store.
+///
+/// Mutating operations (`put`, `get` with promotion, `delete`) take
+/// `&mut self`; the shared GET path ([`KvStore::get_shared`]) is `&self`
+/// end to end — recency and counters live behind interior mutability
+/// (atomics + short uncontended mutexes around the LRU lists).
 #[derive(Debug)]
 pub struct KvStore {
     index: HashMap<Vec<u8>, Entry>,
-    local_lru: LruList<Vec<u8>>,
-    remote_lru: LruList<Vec<u8>>,
+    /// LRU recency behind short mutexes so the shared (`&self`) GET path
+    /// can refresh it. The guards are never held across another lock or a
+    /// context call, and they're uncontended in the coordinator, where
+    /// each store already sits behind a shard mutex.
+    local_lru: Mutex<LruList<Vec<u8>>>,
+    remote_lru: Mutex<LruList<Vec<u8>>>,
     local_capacity: usize,
     policy: GetPolicy,
     /// Refresh an object's LRU recency on local GET hits. `true` is
@@ -147,7 +219,7 @@ pub struct KvStore {
     /// behaviour, where only PUT/promotion set recency (insertion order)
     /// and local hits do not — see EXPERIMENTS.md §Table IV.
     refresh_on_get: bool,
-    stats: KvStats,
+    stats: StatsCells,
     obs: KvObs,
 }
 
@@ -155,16 +227,26 @@ impl KvStore {
     /// `local_capacity` is in objects, as in the paper's experiment
     /// (300 local / 1000 remote).
     pub fn new(local_capacity: usize, policy: GetPolicy) -> Self {
+        Self::build(local_capacity, policy, None)
+    }
+
+    /// A store acting as shard `shard` of a sharded index: identical
+    /// behaviour, but its object gauges carry a `shard` label.
+    pub fn for_shard(local_capacity: usize, policy: GetPolicy, shard: usize) -> Self {
+        Self::build(local_capacity, policy, Some(shard))
+    }
+
+    fn build(local_capacity: usize, policy: GetPolicy, shard: Option<usize>) -> Self {
         assert!(local_capacity > 0, "local capacity must be positive");
         Self {
             index: HashMap::new(),
-            local_lru: LruList::new(),
-            remote_lru: LruList::new(),
+            local_lru: Mutex::new(LruList::new()),
+            remote_lru: Mutex::new(LruList::new()),
             local_capacity,
             policy,
             refresh_on_get: true,
-            stats: KvStats::default(),
-            obs: KvObs::new(),
+            stats: StatsCells::default(),
+            obs: KvObs::new(shard),
         }
     }
 
@@ -175,11 +257,15 @@ impl KvStore {
     }
 
     pub fn stats(&self) -> KvStats {
-        self.stats
+        self.stats.snapshot()
     }
 
     pub fn policy(&self) -> GetPolicy {
         self.policy
+    }
+
+    pub fn local_capacity(&self) -> usize {
+        self.local_capacity
     }
 
     pub fn len(&self) -> usize {
@@ -191,11 +277,11 @@ impl KvStore {
     }
 
     pub fn local_count(&self) -> usize {
-        self.local_lru.len()
+        self.local_lru.lock().unwrap().len()
     }
 
     pub fn remote_count(&self) -> usize {
-        self.remote_lru.len()
+        self.remote_lru.lock().unwrap().len()
     }
 
     fn write_object(
@@ -223,7 +309,7 @@ impl KvStore {
     /// "Evict the object at the tail ... move the evicted object to remote
     /// memory").
     fn evict_one(&mut self, ctx: &mut EmucxlContext) -> Result<()> {
-        let key = match self.local_lru.pop_back() {
+        let key = match self.local_lru.lock().unwrap().pop_back() {
             Some(k) => k,
             None => return Ok(()),
         };
@@ -231,25 +317,25 @@ impl KvStore {
         let new_addr = ctx.migrate(e.addr, NODE_REMOTE)?;
         e.addr = new_addr;
         e.tier = Tier::Remote;
-        e.token = self.remote_lru.push_front(key);
-        self.stats.evictions += 1;
+        e.token = self.remote_lru.lock().unwrap().push_front(key);
+        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
         self.obs.evictions.inc();
         Ok(())
     }
 
     /// Promote a remote object to local memory, evicting first if full.
     fn promote(&mut self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<()> {
-        if self.local_lru.len() >= self.local_capacity {
+        if self.local_lru.lock().unwrap().len() >= self.local_capacity {
             self.evict_one(ctx)?;
         }
         let e = self.index.get_mut(key).expect("promote of unknown key");
         debug_assert_eq!(e.tier, Tier::Remote);
-        self.remote_lru.remove(e.token);
+        self.remote_lru.lock().unwrap().remove(e.token);
         let new_addr = ctx.migrate(e.addr, NODE_LOCAL)?;
         e.addr = new_addr;
         e.tier = Tier::Local;
-        e.token = self.local_lru.push_front(key.to_vec());
-        self.stats.promotions += 1;
+        e.token = self.local_lru.lock().unwrap().push_front(key.to_vec());
+        self.stats.promotions.fetch_add(1, Ordering::Relaxed);
         self.obs.promotions.inc();
         Ok(())
     }
@@ -261,7 +347,7 @@ impl KvStore {
         let _op = obs::enter_op();
         let r = self.put_impl(ctx, key, value);
         self.obs.puts.inc();
-        self.obs.sync_objects(self.local_lru.len(), self.remote_lru.len());
+        self.obs.sync_objects(self.local_count(), self.remote_count());
         obs::record(
             Subsystem::Kv,
             "put",
@@ -278,7 +364,7 @@ impl KvStore {
         if key.is_empty() {
             return Err(EmucxlError::InvalidArgument("empty key".into()));
         }
-        self.stats.puts += 1;
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
         if self.index.contains_key(key) {
             // Update: free the old object and fall through to fresh insert.
             self.delete_inner(ctx, key)?;
@@ -286,7 +372,7 @@ impl KvStore {
         let size = HDR + key.len() + value.len();
         let addr = ctx.alloc(size, NODE_LOCAL)?;
         Self::write_object(ctx, addr, key, value)?;
-        let token = self.local_lru.push_front(key.to_vec());
+        let token = self.local_lru.lock().unwrap().push_front(key.to_vec());
         self.index.insert(
             key.to_vec(),
             Entry {
@@ -295,10 +381,10 @@ impl KvStore {
                 token,
                 key_len: key.len(),
                 val_len: value.len(),
-                access_count: 0,
+                access_count: AtomicU64::new(0),
             },
         );
-        if self.local_lru.len() > self.local_capacity {
+        if self.local_lru.lock().unwrap().len() > self.local_capacity {
             self.evict_one(ctx)?;
         }
         Ok(())
@@ -310,7 +396,7 @@ impl KvStore {
         let _op = obs::enter_op();
         let r = self.get_impl(ctx, key);
         self.obs.gets.inc();
-        self.obs.sync_objects(self.local_lru.len(), self.remote_lru.len());
+        self.obs.sync_objects(self.local_count(), self.remote_count());
         let bytes = match &r {
             Ok(Some(v)) => v.len() as u64,
             _ => 0,
@@ -328,38 +414,35 @@ impl KvStore {
     }
 
     fn get_impl(&mut self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<Option<Vec<u8>>> {
-        self.stats.gets += 1;
-        let (tier, access_count) = match self.index.get_mut(key) {
-            Some(e) => {
-                e.access_count += 1;
-                (e.tier, e.access_count)
-            }
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        let (tier, access_count) = match self.index.get(key) {
+            Some(e) => (e.tier, e.access_count.fetch_add(1, Ordering::Relaxed) + 1),
             None => {
-                self.stats.misses += 1;
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 self.obs.misses.inc();
                 return Ok(None);
             }
         };
         match tier {
             Tier::Local => {
-                self.stats.local_hits += 1;
+                self.stats.local_hits.fetch_add(1, Ordering::Relaxed);
                 self.obs.local_hits.inc();
                 let e = self.index.get(key).unwrap();
                 let token = e.token;
                 let value = Self::read_value(ctx, e)?;
                 if self.refresh_on_get {
-                    self.local_lru.move_to_front(token);
+                    self.local_lru.lock().unwrap().move_to_front(token);
                 }
                 Ok(Some(value))
             }
             Tier::Remote => {
-                self.stats.remote_hits += 1;
+                self.stats.remote_hits.fetch_add(1, Ordering::Relaxed);
                 self.obs.remote_hits.inc();
                 if self.policy.promote_on_get(access_count) {
                     self.promote(ctx, key)?;
                 } else {
                     let token = self.index.get(key).unwrap().token;
-                    self.remote_lru.move_to_front(token);
+                    self.remote_lru.lock().unwrap().move_to_front(token);
                 }
                 let e = self.index.get(key).unwrap();
                 Ok(Some(Self::read_value(ctx, e)?))
@@ -369,24 +452,28 @@ impl KvStore {
 
     /// Listing 3 GET through the coordinator's *shared* read path.
     ///
-    /// The caller holds only a read lock on the context, so this variant
-    /// never migrates. If the hit would trigger a promotion under the
-    /// store's policy, it returns [`SharedGet::NeedsExclusive`] **without
+    /// Genuinely `&self` — concurrent shared GETs on the same store never
+    /// block each other beyond the brief LRU-recency mutex. The caller
+    /// holds only a read lock on the context, so this variant never
+    /// migrates. If the hit would trigger a promotion under the store's
+    /// policy, it returns [`SharedGet::NeedsExclusive`] **without
     /// recording anything** (no stats, no access_count bump, no LRU
     /// movement) so the caller can re-run the full [`KvStore::get`] under
     /// an exclusive context lock with no double counting.
-    pub fn get_shared(&mut self, ctx: &EmucxlContext, key: &[u8]) -> Result<SharedGet> {
+    pub fn get_shared(&self, ctx: &EmucxlContext, key: &[u8]) -> Result<SharedGet> {
         // Peek first: would this GET promote? (access_count + 1 is what
         // get_impl would see after its bump.)
         if let Some(e) = self.index.get(key) {
-            if e.tier == Tier::Remote && self.policy.promote_on_get(e.access_count + 1) {
+            if e.tier == Tier::Remote
+                && self.policy.promote_on_get(e.access_count.load(Ordering::Relaxed) + 1)
+            {
                 return Ok(SharedGet::NeedsExclusive);
             }
         }
         let _op = obs::enter_op();
         let r = self.get_shared_impl(ctx, key);
         self.obs.gets.inc();
-        self.obs.sync_objects(self.local_lru.len(), self.remote_lru.len());
+        self.obs.sync_objects(self.local_count(), self.remote_count());
         let bytes = match &r {
             Ok(Some(v)) => v.len() as u64,
             _ => 0,
@@ -404,36 +491,36 @@ impl KvStore {
     }
 
     /// `get_impl` minus the promotion arm (ruled out by the peek above).
-    fn get_shared_impl(&mut self, ctx: &EmucxlContext, key: &[u8]) -> Result<Option<Vec<u8>>> {
-        self.stats.gets += 1;
-        let tier = match self.index.get_mut(key) {
+    fn get_shared_impl(&self, ctx: &EmucxlContext, key: &[u8]) -> Result<Option<Vec<u8>>> {
+        self.stats.gets.fetch_add(1, Ordering::Relaxed);
+        let tier = match self.index.get(key) {
             Some(e) => {
-                e.access_count += 1;
+                e.access_count.fetch_add(1, Ordering::Relaxed);
                 e.tier
             }
             None => {
-                self.stats.misses += 1;
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 self.obs.misses.inc();
                 return Ok(None);
             }
         };
         match tier {
             Tier::Local => {
-                self.stats.local_hits += 1;
+                self.stats.local_hits.fetch_add(1, Ordering::Relaxed);
                 self.obs.local_hits.inc();
                 let e = self.index.get(key).unwrap();
                 let token = e.token;
                 let value = Self::read_value(ctx, e)?;
                 if self.refresh_on_get {
-                    self.local_lru.move_to_front(token);
+                    self.local_lru.lock().unwrap().move_to_front(token);
                 }
                 Ok(Some(value))
             }
             Tier::Remote => {
-                self.stats.remote_hits += 1;
+                self.stats.remote_hits.fetch_add(1, Ordering::Relaxed);
                 self.obs.remote_hits.inc();
                 let token = self.index.get(key).unwrap().token;
-                self.remote_lru.move_to_front(token);
+                self.remote_lru.lock().unwrap().move_to_front(token);
                 let e = self.index.get(key).unwrap();
                 Ok(Some(Self::read_value(ctx, e)?))
             }
@@ -445,10 +532,10 @@ impl KvStore {
             Some(e) => {
                 match e.tier {
                     Tier::Local => {
-                        self.local_lru.remove(e.token);
+                        self.local_lru.lock().unwrap().remove(e.token);
                     }
                     Tier::Remote => {
-                        self.remote_lru.remove(e.token);
+                        self.remote_lru.lock().unwrap().remove(e.token);
                     }
                 }
                 ctx.free_sized(e.addr, e.obj_size())?;
@@ -461,10 +548,10 @@ impl KvStore {
     /// Listing 4 DELETE: search both tiers, free the object.
     pub fn delete(&mut self, ctx: &mut EmucxlContext, key: &[u8]) -> Result<bool> {
         let _op = obs::enter_op();
-        self.stats.deletes += 1;
+        self.stats.deletes.fetch_add(1, Ordering::Relaxed);
         let r = self.delete_inner(ctx, key);
         self.obs.deletes.inc();
-        self.obs.sync_objects(self.local_lru.len(), self.remote_lru.len());
+        self.obs.sync_objects(self.local_count(), self.remote_count());
         obs::record(Subsystem::Kv, "delete", ctx.now_ns(), key.len() as u64, 0, 0.0, r.is_ok());
         r
     }
@@ -691,5 +778,20 @@ mod tests {
         let mut c = ctx();
         let mut kv = store(2, GetPolicy::Promote);
         assert!(kv.put(&mut c, b"", b"v").is_err());
+    }
+
+    #[test]
+    fn shared_get_is_ref_compatible_and_threadable() {
+        // Compile-time: the shared GET path must work through `&KvStore`
+        // (the historical signature took `&mut self` despite its doc), and
+        // the store must be shareable across threads.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<KvStore>();
+        assert_send_sync::<EmucxlContext>();
+        let mut c = ctx();
+        let mut kv = store(2, GetPolicy::InPlace);
+        kv.put(&mut c, b"k", b"v").unwrap();
+        let shared: &KvStore = &kv;
+        assert_eq!(shared.get_shared(&c, b"k").unwrap(), SharedGet::Done(Some(b"v".to_vec())));
     }
 }

@@ -13,6 +13,7 @@ fn server() -> PoolServer {
         emucxl: EmucxlConfig::sized(8 << 20, 32 << 20),
         kv_local_capacity: 4,
         kv_policy: GetPolicy::Promote,
+        kv_shards: 2,
         batch: 16,
         max_wait: Duration::from_micros(100),
         trace_dump: None,

@@ -20,6 +20,7 @@ fn server() -> PoolServer {
         emucxl: EmucxlConfig::sized(32 << 20, 128 << 20),
         kv_local_capacity: 8,
         kv_policy: GetPolicy::Promote,
+        kv_shards: 4,
         batch: 16,
         max_wait: Duration::from_micros(100),
         trace_dump: None,

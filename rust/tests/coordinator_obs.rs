@@ -20,6 +20,7 @@ fn server() -> PoolServer {
         emucxl: EmucxlConfig::sized(8 << 20, 32 << 20),
         kv_local_capacity: 4,
         kv_policy: GetPolicy::Promote,
+        kv_shards: 2,
         batch: 4,
         max_wait: Duration::from_micros(100),
         trace_dump: None,
@@ -191,6 +192,7 @@ fn shutdown_writes_trace_dump_file() {
         emucxl: EmucxlConfig::sized(8 << 20, 32 << 20),
         kv_local_capacity: 4,
         kv_policy: GetPolicy::Promote,
+        kv_shards: 2,
         batch: 4,
         max_wait: Duration::from_micros(100),
         trace_dump: Some(path.clone()),

@@ -23,6 +23,7 @@ fn server(metrics_listen: Option<u16>) -> PoolServer {
         emucxl: EmucxlConfig::sized(8 << 20, 32 << 20),
         kv_local_capacity: 4,
         kv_policy: GetPolicy::Promote,
+        kv_shards: 2,
         batch: 4,
         max_wait: Duration::from_micros(100),
         trace_dump: None,
