@@ -47,6 +47,7 @@ fn main() -> emucxl::Result<()> {
         trace_dump: None,
         recorder_capacity: None,
         metrics_listen: None,
+        idle_timeout: None,
     };
     let srv = PoolServer::start(cfg, 0)?;
     let addr = srv.addr();

@@ -31,6 +31,7 @@ fn run_scale(tenants: usize, artifacts: Option<std::path::PathBuf>) -> (f64, f64
         trace_dump: None,
         recorder_capacity: None,
         metrics_listen: None,
+        idle_timeout: None,
     };
     let srv = PoolServer::start(cfg, 0).unwrap();
     let addr = srv.addr();

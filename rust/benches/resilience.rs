@@ -1,0 +1,95 @@
+//! Resilience-plane overhead: what do client deadlines and the fault
+//! proxy (at 0% fault rate, i.e. pure passthrough) cost on the wire hot
+//! path? Both should be noise — deadlines are a one-time socket option,
+//! and the proxy adds two context switches per frame.
+//!
+//! Run: `cargo bench --bench resilience`
+
+mod common;
+
+use std::time::Duration;
+
+use common::{bench, section};
+use emucxl::config::EmucxlConfig;
+use emucxl::coordinator::client::{ClientConfig, PoolClient};
+use emucxl::coordinator::faultproxy::{FaultConfig, FaultProxy};
+use emucxl::coordinator::server::{PoolConfig, PoolServer};
+use emucxl::middleware::kv::GetPolicy;
+
+fn server() -> PoolServer {
+    let cfg = PoolConfig {
+        emucxl: EmucxlConfig::sized(64 << 20, 256 << 20),
+        kv_local_capacity: 64,
+        kv_policy: GetPolicy::Promote,
+        kv_shards: 8,
+        batch: 64,
+        max_wait: Duration::from_micros(200),
+        trace_dump: None,
+        recorder_capacity: None,
+        metrics_listen: None,
+        idle_timeout: None,
+    };
+    PoolServer::start(cfg, 0).unwrap()
+}
+
+fn no_deadlines() -> ClientConfig {
+    ClientConfig {
+        read_timeout: None,
+        write_timeout: None,
+        max_retries: 0,
+        ..ClientConfig::default()
+    }
+}
+
+fn write_read_loop(c: &mut PoolClient, addr: u64, data: &[u8]) {
+    c.write(addr, data).unwrap();
+    let (back, _) = c.read(addr, data.len() as u32).unwrap();
+    assert_eq!(back.len(), data.len());
+}
+
+fn main() {
+    let data = vec![0xABu8; 1024];
+
+    section("wire round-trip (write+read 1 KiB), resilience overhead");
+
+    let srv = server();
+
+    // Baseline: no socket deadlines, no retry budget, direct connection.
+    let mut direct_bare =
+        PoolClient::connect_with(srv.addr(), 16 << 20, no_deadlines()).unwrap();
+    let (a, _) = direct_bare.alloc(4096, 0).unwrap();
+    let m = bench("direct, no deadlines", 200, 2_000, || {
+        write_read_loop(&mut direct_bare, a, &data);
+    });
+    println!("{}", m.report());
+    let baseline = m.mean();
+    direct_bare.free(a).unwrap();
+    direct_bare.bye().unwrap();
+
+    // Deadlines armed (the new default): same path, SO_RCVTIMEO/SNDTIMEO
+    // set once at connect. Should be indistinguishable.
+    let mut direct_dl = PoolClient::connect(srv.addr(), 16 << 20).unwrap();
+    let (a, _) = direct_dl.alloc(4096, 0).unwrap();
+    let m = bench("direct, 30s deadlines + retry budget", 200, 2_000, || {
+        write_read_loop(&mut direct_dl, a, &data);
+    });
+    println!("{}  ({:+.1}% vs bare)", m.report(), (m.mean() / baseline - 1.0) * 100.0);
+    direct_dl.free(a).unwrap();
+    direct_dl.bye().unwrap();
+
+    // Through the fault proxy at 0% rate: pure frame-forwarding overhead.
+    let proxy = FaultProxy::start(
+        srv.addr(),
+        FaultConfig { fault_rate: 0.0, ..FaultConfig::default() },
+    )
+    .unwrap();
+    let mut proxied = PoolClient::connect(proxy.addr(), 16 << 20).unwrap();
+    let (a, _) = proxied.alloc(4096, 0).unwrap();
+    let m = bench("via fault proxy (0% rate)", 200, 2_000, || {
+        write_read_loop(&mut proxied, a, &data);
+    });
+    println!("{}  ({:+.1}% vs bare)", m.report(), (m.mean() / baseline - 1.0) * 100.0);
+    assert_eq!(proxy.stats().injected(), 0);
+    proxied.free(a).unwrap();
+    proxied.bye().unwrap();
+}

@@ -2,6 +2,36 @@
 //! links against. One method per wire request; `Error` responses map back
 //! onto [`EmucxlError::Protocol`] (quota errors keep their message).
 //!
+//! # Resilience
+//!
+//! The wire plane no longer assumes a perfect network. Every client carries
+//! a [`ClientConfig`] with connect/read/write deadlines (enforced via
+//! `TcpStream::set_read_timeout` / `set_write_timeout`) and a retry policy:
+//!
+//! * **Idempotent requests** (`Read`, `IsLocal`, `Stats`, `KvGet`,
+//!   `Metrics`, `MetricsOm`, `TraceDump`) are transparently retried on a
+//!   transport failure: the dead connection is torn down, the client
+//!   redials (re-sending `Hello` with the original quota), and the request
+//!   is re-issued after exponential backoff with jitter, up to
+//!   [`ClientConfig::max_retries`] times.
+//! * **Non-idempotent requests** (`Hello`, `Alloc`, `Free`, `Write`,
+//!   `Migrate`, `KvPut`, `KvDelete`, `Bye`) fail fast once the request may
+//!   have reached the coordinator: a deadline expiry surfaces as
+//!   [`EmucxlError::Timeout`], any other mid-flight transport death as
+//!   [`EmucxlError::Retriable`] — the caller decides whether re-issuing is
+//!   safe. Failures *before* the request was sent (redial, re-`Hello`) are
+//!   retried for every request kind, since nothing was applied.
+//!
+//! Reconnecting re-registers as a **new tenant**: the coordinator reaps the
+//! old connection and frees everything it owned, so retried reads of
+//! pool addresses allocated on the previous incarnation will answer
+//! `BadAddress`. Shared-KV and observability requests are unaffected —
+//! they don't depend on tenant identity.
+//!
+//! Retries and deadline expiries are instrumented as
+//! `emucxl_client_retries_total` / `emucxl_client_timeouts_total` counters
+//! (by op) in the process-global [`obs`] registry.
+//!
 //! Besides the tenant client, this module hosts the scrape bridge
 //! ([`start_stats_bridge`]): an HTTP observability plane that proxies
 //! `/metrics`, `/trace` and `/healthz` over the wire protocol to an
@@ -10,40 +40,148 @@
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::coordinator::proto::{read_frame, write_frame, Request, Response};
 use crate::error::{EmucxlError, Result};
+use crate::obs;
 use crate::obs::http::{ObsHttpServer, ObsSource};
+use crate::util::rng::Rng;
+
+/// Deadlines and retry policy of a [`PoolClient`].
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Deadline for establishing the TCP connection.
+    pub connect_timeout: Duration,
+    /// Per-read socket deadline (`None` = block forever, the old
+    /// behaviour). Applies to every frame read, including `Welcome`.
+    pub read_timeout: Option<Duration>,
+    /// Per-write socket deadline (`None` = block forever).
+    pub write_timeout: Option<Duration>,
+    /// Transparent reconnect-and-retry budget for idempotent requests.
+    /// 0 disables retries entirely.
+    pub max_retries: u32,
+    /// First retry backoff; doubled each attempt (decorrelated by jitter
+    /// in `[delay/2, delay]` so synchronized clients don't stampede).
+    pub backoff_base: Duration,
+    /// Backoff ceiling.
+    pub backoff_cap: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Some(Duration::from_secs(30)),
+            write_timeout: Some(Duration::from_secs(30)),
+            max_retries: 3,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_secs(1),
+        }
+    }
+}
+
+/// One live connection (split read/write halves of the same stream).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
 
 /// A connected tenant.
 pub struct PoolClient {
-    reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
+    addr: SocketAddr,
+    /// `Some` = tenant mode (re-`Hello` with this quota on reconnect);
+    /// `None` = scraper mode (observability requests only, no Hello).
+    quota: Option<u64>,
+    config: ClientConfig,
+    conn: Option<Conn>,
     tenant: u32,
+    rng: Rng,
 }
 
 impl std::fmt::Debug for PoolClient {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("PoolClient").field("tenant", &self.tenant).finish()
+        f.debug_struct("PoolClient")
+            .field("tenant", &self.tenant)
+            .field("addr", &self.addr)
+            .field("connected", &self.conn.is_some())
+            .finish()
     }
 }
 
+/// Seeds for backoff jitter: distinct per client, no clock dependence.
+static JITTER_SEED: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+
+/// Requests whose effects are safe to re-issue after a transport failure.
+fn is_idempotent(req: &Request) -> bool {
+    matches!(
+        req,
+        Request::Read { .. }
+            | Request::IsLocal { .. }
+            | Request::Stats { .. }
+            | Request::KvGet { .. }
+            | Request::Metrics
+            | Request::MetricsOm
+            | Request::TraceDump { .. }
+    )
+}
+
+fn op_label(req: &Request) -> &'static str {
+    match req {
+        Request::Hello { .. } => "hello",
+        Request::Alloc { .. } => "alloc",
+        Request::Free { .. } => "free",
+        Request::Read { .. } => "read",
+        Request::Write { .. } => "write",
+        Request::Migrate { .. } => "migrate",
+        Request::IsLocal { .. } => "is_local",
+        Request::Stats { .. } => "stats",
+        Request::KvPut { .. } => "kv_put",
+        Request::KvGet { .. } => "kv_get",
+        Request::KvDelete { .. } => "kv_delete",
+        Request::Bye => "bye",
+        Request::Metrics => "metrics",
+        Request::MetricsOm => "metrics",
+        Request::TraceDump { .. } => "trace_dump",
+    }
+}
+
+/// Did this transport error come from an expired socket deadline?
+/// (`set_read_timeout` surfaces as `WouldBlock` on Unix, `TimedOut` on
+/// Windows; `connect_timeout` as `TimedOut`.)
+fn is_timeout(e: &EmucxlError) -> bool {
+    matches!(
+        e,
+        EmucxlError::Io(io)
+            if matches!(
+                io.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            )
+    )
+}
+
+/// A call attempt's failure, split by whether the request had already been
+/// (partially) written to the socket. Pre-send failures are safe to retry
+/// for every request kind; post-send failures only for idempotent ones.
+enum CallErr {
+    PreSend(EmucxlError),
+    PostSend(EmucxlError),
+}
+
 impl PoolClient {
-    /// Connect and register with a byte quota.
+    /// Connect and register with a byte quota, using default deadlines.
     pub fn connect(addr: SocketAddr, quota: u64) -> Result<Self> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        let reader = BufReader::new(stream.try_clone()?);
-        let writer = BufWriter::new(stream);
-        let mut c = Self { reader, writer, tenant: 0 };
-        match c.call(Request::Hello { quota })? {
-            Response::Welcome { tenant } => {
-                c.tenant = tenant;
-                Ok(c)
-            }
-            other => Err(EmucxlError::Protocol(format!("expected Welcome, got {other:?}"))),
-        }
+        Self::connect_with(addr, quota, ClientConfig::default())
+    }
+
+    /// Connect and register with a byte quota and explicit deadlines/retry
+    /// policy.
+    pub fn connect_with(addr: SocketAddr, quota: u64, config: ClientConfig) -> Result<Self> {
+        let mut c = Self::unconnected(addr, Some(quota), config);
+        c.connect_retrying()?;
+        Ok(c)
     }
 
     /// Connect WITHOUT registering as a tenant. Only the observability
@@ -51,26 +189,181 @@ impl PoolClient {
     /// connection — the coordinator allows them before `Hello`. Scrape
     /// paths use this so each scrape doesn't churn the tenant table.
     pub fn connect_scraper(addr: SocketAddr) -> Result<Self> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        let reader = BufReader::new(stream.try_clone()?);
-        let writer = BufWriter::new(stream);
-        Ok(Self { reader, writer, tenant: 0 })
+        Self::connect_scraper_with(addr, ClientConfig::default())
+    }
+
+    /// Scraper connection with explicit deadlines/retry policy.
+    pub fn connect_scraper_with(addr: SocketAddr, config: ClientConfig) -> Result<Self> {
+        let mut c = Self::unconnected(addr, None, config);
+        c.connect_retrying()?;
+        Ok(c)
+    }
+
+    /// Initial connect with the retry budget. Dial + `Hello` are safe to
+    /// re-issue unconditionally: a registration whose connection died is
+    /// reaped by the coordinator's disconnect cleanup, so at most one
+    /// live registration ever results.
+    fn connect_retrying(&mut self) -> Result<()> {
+        let mut attempt: u32 = 0;
+        loop {
+            let err = match self.ensure_conn() {
+                Ok(()) => return Ok(()),
+                Err(e) => e,
+            };
+            self.conn = None;
+            if is_timeout(&err) {
+                obs::metrics()
+                    .counter(
+                        "emucxl_client_timeouts_total",
+                        "client wire deadline expiries by op",
+                        &[("op", "connect")],
+                    )
+                    .inc();
+            }
+            if attempt >= self.config.max_retries {
+                return Err(err);
+            }
+            obs::metrics()
+                .counter(
+                    "emucxl_client_retries_total",
+                    "client reconnect-and-retry attempts by op",
+                    &[("op", "connect")],
+                )
+                .inc();
+            let delay = self.backoff_delay(attempt);
+            std::thread::sleep(delay);
+            attempt += 1;
+        }
+    }
+
+    fn unconnected(addr: SocketAddr, quota: Option<u64>, config: ClientConfig) -> Self {
+        let seed = JITTER_SEED
+            .fetch_add(0x9E37_79B9, Ordering::Relaxed)
+            .wrapping_add(u64::from(std::process::id()));
+        Self { addr, quota, config, conn: None, tenant: 0, rng: Rng::new(seed) }
     }
 
     pub fn tenant_id(&self) -> u32 {
         self.tenant
     }
 
-    fn call(&mut self, req: Request) -> Result<Response> {
-        write_frame(&mut self.writer, &req.encode())?;
-        let frame = read_frame(&mut self.reader)?
-            .ok_or_else(|| EmucxlError::Protocol("server closed connection".into()))?;
-        let resp = Response::decode(&frame)?;
-        if let Response::Error { msg } = &resp {
-            return Err(EmucxlError::Protocol(msg.clone()));
+    /// Dial (with the connect deadline), arm the socket deadlines, and —
+    /// in tenant mode — register via `Hello`. No-op when already connected.
+    fn ensure_conn(&mut self) -> Result<()> {
+        if self.conn.is_some() {
+            return Ok(());
         }
-        Ok(resp)
+        let stream = TcpStream::connect_timeout(&self.addr, self.config.connect_timeout)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(self.config.read_timeout)?;
+        stream.set_write_timeout(self.config.write_timeout)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        self.conn = Some(Conn { reader, writer });
+        if let Some(quota) = self.quota {
+            match self.exchange(&Request::Hello { quota }) {
+                Ok(Response::Welcome { tenant }) => {
+                    self.tenant = tenant;
+                }
+                Ok(Response::Error { msg }) => {
+                    self.conn = None;
+                    return Err(EmucxlError::Protocol(msg));
+                }
+                Ok(other) => {
+                    self.conn = None;
+                    return Err(EmucxlError::Protocol(format!(
+                        "expected Welcome, got {other:?}"
+                    )));
+                }
+                Err(e) => {
+                    self.conn = None;
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One raw request/response exchange on the live connection.
+    fn exchange(&mut self, req: &Request) -> Result<Response> {
+        let conn = self.conn.as_mut().expect("exchange without connection");
+        write_frame(&mut conn.writer, &req.encode())?;
+        let frame = read_frame(&mut conn.reader)?
+            .ok_or_else(|| EmucxlError::Protocol("server closed connection".into()))?;
+        Response::decode(&frame)
+    }
+
+    /// One attempt: connect (if needed), send, await the reply.
+    fn try_call(&mut self, req: &Request) -> std::result::Result<Response, CallErr> {
+        self.ensure_conn().map_err(CallErr::PreSend)?;
+        // From here on the request may have (partially) hit the wire; any
+        // failure poisons the connection AND the op's outcome is unknown.
+        self.exchange(req).map_err(CallErr::PostSend)
+    }
+
+    /// Exponential backoff with jitter: `base * 2^attempt` capped at
+    /// `backoff_cap`, then drawn uniformly from `[delay/2, delay]`.
+    fn backoff_delay(&mut self, attempt: u32) -> Duration {
+        let exp = self
+            .config
+            .backoff_base
+            .saturating_mul(1u32 << attempt.min(16));
+        let exp = exp.min(self.config.backoff_cap);
+        let nanos = exp.as_nanos().min(u64::MAX as u128) as u64;
+        let jittered = nanos / 2 + self.rng.below(nanos / 2 + 1);
+        Duration::from_nanos(jittered)
+    }
+
+    fn call(&mut self, req: Request) -> Result<Response> {
+        let op = op_label(&req);
+        let idempotent = is_idempotent(&req);
+        let mut attempt: u32 = 0;
+        loop {
+            let (err, presend) = match self.try_call(&req) {
+                Ok(Response::Error { msg }) => {
+                    // A server-side error is an authoritative reply, never
+                    // retried — the connection stays healthy.
+                    return Err(EmucxlError::Protocol(msg));
+                }
+                Ok(resp) => return Ok(resp),
+                Err(CallErr::PreSend(e)) => (e, true),
+                Err(CallErr::PostSend(e)) => (e, false),
+            };
+            // Transport failure: the stream is dead or desynced either way.
+            self.conn = None;
+            let timed_out = is_timeout(&err);
+            if timed_out {
+                obs::metrics()
+                    .counter(
+                        "emucxl_client_timeouts_total",
+                        "client wire deadline expiries by op",
+                        &[("op", op)],
+                    )
+                    .inc();
+            }
+            // Mid-flight death of a non-idempotent request: outcome
+            // unknown, surface immediately — never auto-retry.
+            if !presend && !idempotent {
+                return Err(if timed_out {
+                    EmucxlError::Timeout { op }
+                } else {
+                    EmucxlError::Retriable { op, cause: err.to_string() }
+                });
+            }
+            if attempt >= self.config.max_retries {
+                return Err(if timed_out { EmucxlError::Timeout { op } } else { err });
+            }
+            obs::metrics()
+                .counter(
+                    "emucxl_client_retries_total",
+                    "client reconnect-and-retry attempts by op",
+                    &[("op", op)],
+                )
+                .inc();
+            let delay = self.backoff_delay(attempt);
+            std::thread::sleep(delay);
+            attempt += 1;
+        }
     }
 
     /// Remote `emucxl_alloc`; returns (addr, priced latency).
@@ -249,6 +542,61 @@ pub fn start_stats_bridge(daemon: SocketAddr, port: u16) -> Result<ObsHttpServer
 
 #[cfg(test)]
 mod tests {
-    // End-to-end client/server tests live in rust/tests/coordinator.rs —
+    // End-to-end client/server and fault-injection tests live in
+    // rust/tests/coordinator.rs and rust/tests/coordinator_faults.rs —
     // they need a running server. Pure encode-path tests are in proto.rs.
+    use super::*;
+
+    #[test]
+    fn idempotency_classification_matches_the_wire_contract() {
+        assert!(is_idempotent(&Request::Read { addr: 0, len: 1 }));
+        assert!(is_idempotent(&Request::IsLocal { addr: 0 }));
+        assert!(is_idempotent(&Request::Stats { node: 0 }));
+        assert!(is_idempotent(&Request::KvGet { key: vec![] }));
+        assert!(is_idempotent(&Request::Metrics));
+        assert!(is_idempotent(&Request::MetricsOm));
+        assert!(is_idempotent(&Request::TraceDump { max: 0 }));
+
+        assert!(!is_idempotent(&Request::Hello { quota: 0 }));
+        assert!(!is_idempotent(&Request::Alloc { size: 1, node: 0 }));
+        assert!(!is_idempotent(&Request::Free { addr: 0 }));
+        assert!(!is_idempotent(&Request::Write { addr: 0, data: vec![] }));
+        assert!(!is_idempotent(&Request::Migrate { addr: 0, node: 0 }));
+        assert!(!is_idempotent(&Request::KvPut { key: vec![], value: vec![] }));
+        assert!(!is_idempotent(&Request::KvDelete { key: vec![] }));
+        assert!(!is_idempotent(&Request::Bye));
+    }
+
+    #[test]
+    fn backoff_grows_and_respects_the_cap() {
+        let cfg = ClientConfig {
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(100),
+            ..ClientConfig::default()
+        };
+        let addr: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let mut c = PoolClient::unconnected(addr, None, cfg);
+        for attempt in 0..20 {
+            let d = c.backoff_delay(attempt);
+            // jitter floor is half the exponential delay
+            assert!(d >= Duration::from_millis(5), "attempt {attempt}: {d:?}");
+            assert!(d <= Duration::from_millis(100), "attempt {attempt}: {d:?}");
+        }
+        // first attempt stays within [base/2, base]
+        let d0 = c.backoff_delay(0);
+        assert!(d0 <= Duration::from_millis(10), "{d0:?}");
+    }
+
+    #[test]
+    fn timeout_kinds_classified() {
+        let t: EmucxlError =
+            std::io::Error::new(std::io::ErrorKind::WouldBlock, "t").into();
+        assert!(is_timeout(&t));
+        let t: EmucxlError = std::io::Error::new(std::io::ErrorKind::TimedOut, "t").into();
+        assert!(is_timeout(&t));
+        let n: EmucxlError =
+            std::io::Error::new(std::io::ErrorKind::ConnectionReset, "n").into();
+        assert!(!is_timeout(&n));
+        assert!(!is_timeout(&EmucxlError::Protocol("x".into())));
+    }
 }

@@ -1,0 +1,325 @@
+//! Fault-injecting TCP proxy for wire-plane resilience testing (std-only,
+//! like everything else in this crate).
+//!
+//! Sits between a [`PoolClient`](crate::coordinator::client::PoolClient)
+//! and the coordinator and perturbs the stream at **frame** granularity:
+//! it understands the length-prefixed framing of
+//! [`proto`](crate::coordinator::proto) just enough to forward one frame at
+//! a time and, with probability [`FaultConfig::fault_rate`] per frame,
+//! injects one of four faults:
+//!
+//! * **Delay** — hold the frame for [`FaultConfig::delay`] before
+//!   forwarding (exercises client read deadlines).
+//! * **Corrupt** — flip the frame's tag byte (exercises the server's
+//!   decode-error path and the client's desync-reconnect path; the tag is
+//!   the one byte whose corruption is always *detectable* — the format has
+//!   no checksum, so flips in user data would commit silently).
+//! * **Truncate** — forward the length prefix but only half the payload,
+//!   then kill the connection (exercises mid-frame-disconnect cleanup and
+//!   the server's idle reaping).
+//! * **Drop** — kill the connection without forwarding (exercises
+//!   reconnect-and-retry).
+//!
+//! Both directions are perturbed independently. The fault schedule is
+//! deterministic given ([`FaultConfig::seed`], connection order, traffic),
+//! so failing soaks replay. Used by `tests/coordinator_faults.rs` and the
+//! `emucxl soak --fault-rate` CLI path; never by production code.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::obs;
+use crate::util::rng::Rng;
+
+/// Fault-injection policy of a [`FaultProxy`].
+#[derive(Debug, Clone)]
+pub struct FaultConfig {
+    /// Per-frame fault probability in `[0, 1]`. 0 = transparent proxy.
+    pub fault_rate: f64,
+    /// Latency injected by a delay fault.
+    pub delay: Duration,
+    /// Seed of the deterministic fault schedule.
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self { fault_rate: 0.05, delay: Duration::from_millis(50), seed: 1 }
+    }
+}
+
+/// Injected-fault counts, readable while the proxy runs.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    pub frames: AtomicU64,
+    pub delays: AtomicU64,
+    pub corruptions: AtomicU64,
+    pub truncations: AtomicU64,
+    pub drops: AtomicU64,
+}
+
+impl FaultStats {
+    /// Total faults injected across all kinds.
+    pub fn injected(&self) -> u64 {
+        self.delays.load(Ordering::Relaxed)
+            + self.corruptions.load(Ordering::Relaxed)
+            + self.truncations.load(Ordering::Relaxed)
+            + self.drops.load(Ordering::Relaxed)
+    }
+}
+
+/// A running fault proxy; stops on [`FaultProxy::shutdown`] or drop.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<FaultStats>,
+    /// Live proxied streams, shut down on stop so pump threads exit even
+    /// when both endpoints would otherwise idle forever.
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+enum Fault {
+    Delay,
+    Corrupt,
+    Truncate,
+    Drop,
+}
+
+impl FaultProxy {
+    /// Listen on `127.0.0.1:0` and forward every connection to `upstream`,
+    /// injecting faults per `config`.
+    pub fn start(upstream: SocketAddr, config: FaultConfig) -> Result<Self> {
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(FaultStats::default());
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let (stop2, stats2, conns2) = (Arc::clone(&stop), Arc::clone(&stats), Arc::clone(&conns));
+        let accept = std::thread::Builder::new()
+            .name("emucxl-faultproxy".into())
+            .spawn(move || {
+                accept_loop(listener, upstream, config, stop2, stats2, conns2)
+            })?;
+        Ok(Self { addr, stop, accept: Some(accept), stats, conns })
+    }
+
+    /// Address clients should connect to instead of the daemon's.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &FaultStats {
+        &self.stats
+    }
+
+    /// Stop accepting, kill every proxied connection, join the threads.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let _ = TcpStream::connect(self.addr); // unblock accept()
+        for s in self.conns.lock().unwrap().drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    upstream: SocketAddr,
+    config: FaultConfig,
+    stop: Arc<AtomicBool>,
+    stats: Arc<FaultStats>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+) {
+    let mut pumps: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    let mut conn_id: u64 = 0;
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let client = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        conn_id += 1;
+        let server = match TcpStream::connect(upstream) {
+            Ok(s) => s,
+            Err(_) => continue, // upstream down: drop the client
+        };
+        client.set_nodelay(true).ok();
+        server.set_nodelay(true).ok();
+        pumps.retain(|h| !h.is_finished());
+        // Per-direction RNGs: same seed + same traffic = same schedule.
+        let (c2u_rng, u2c_rng) = (
+            Rng::new(config.seed ^ (conn_id * 2)),
+            Rng::new(config.seed ^ (conn_id * 2 + 1)),
+        );
+        let pair = |from: &TcpStream, to: &TcpStream| -> Result<(TcpStream, TcpStream)> {
+            Ok((from.try_clone()?, to.try_clone()?))
+        };
+        let Ok((c_r, s_w)) = pair(&client, &server) else { continue };
+        let Ok((s_r, c_w)) = pair(&server, &client) else { continue };
+        {
+            let mut held = conns.lock().unwrap();
+            held.retain(|s| {
+                // prune closed entries cheaply: peek would block, so just
+                // cap growth by keeping the vector bounded to live pumps
+                s.peer_addr().is_ok()
+            });
+            held.push(client);
+            held.push(server);
+        }
+        let (cfg_a, cfg_b) = (config.clone(), config.clone());
+        let (st_a, st_b) = (Arc::clone(&stats), Arc::clone(&stats));
+        if let Ok(h) = std::thread::Builder::new()
+            .name("emucxl-fault-c2u".into())
+            .spawn(move || pump(c_r, s_w, cfg_a, c2u_rng, st_a))
+        {
+            pumps.push(h);
+        }
+        if let Ok(h) = std::thread::Builder::new()
+            .name("emucxl-fault-u2c".into())
+            .spawn(move || pump(s_r, c_w, cfg_b, u2c_rng, st_b))
+        {
+            pumps.push(h);
+        }
+    }
+    for h in pumps {
+        let _ = h.join();
+    }
+}
+
+/// Kill both halves of a proxied connection.
+fn sever(from: &TcpStream, to: &TcpStream) {
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
+}
+
+/// Forward length-prefixed frames from `from` to `to`, injecting faults.
+/// Returns (ending the thread) when either side dies or a drop/truncate
+/// fault severs the connection.
+fn pump(
+    mut from: TcpStream,
+    mut to: TcpStream,
+    config: FaultConfig,
+    mut rng: Rng,
+    stats: Arc<FaultStats>,
+) {
+    loop {
+        let mut len_buf = [0u8; 4];
+        if from.read_exact(&mut len_buf).is_err() {
+            sever(&from, &to);
+            return;
+        }
+        let len = u32::from_le_bytes(len_buf) as usize;
+        let mut payload = vec![0u8; len];
+        if from.read_exact(&mut payload).is_err() {
+            sever(&from, &to);
+            return;
+        }
+        stats.frames.fetch_add(1, Ordering::Relaxed);
+        let fault = if config.fault_rate > 0.0 && rng.chance(config.fault_rate) {
+            Some(match rng.index(4) {
+                0 => Fault::Delay,
+                1 => Fault::Corrupt,
+                2 => Fault::Truncate,
+                _ => Fault::Drop,
+            })
+        } else {
+            None
+        };
+        match fault {
+            Some(Fault::Delay) => {
+                stats.delays.fetch_add(1, Ordering::Relaxed);
+                count_fault("delay");
+                std::thread::sleep(config.delay);
+            }
+            Some(Fault::Corrupt) if !payload.is_empty() => {
+                stats.corruptions.fetch_add(1, Ordering::Relaxed);
+                count_fault("corrupt");
+                // Flip the TAG byte, not a random one: the wire format
+                // carries no checksum, so a flip inside e.g. a Write's
+                // data bytes would be committed undetectably — that tests
+                // nothing about the plane. A tag flip is guaranteed to be
+                // a decode error on whichever end parses the frame
+                // (`x ^ 0xA5 > 12` for every valid tag x).
+                payload[0] ^= 0xA5;
+            }
+            Some(Fault::Corrupt) => {} // nothing to corrupt in an empty frame
+            Some(Fault::Truncate) => {
+                stats.truncations.fetch_add(1, Ordering::Relaxed);
+                count_fault("truncate");
+                let keep = payload.len() / 2;
+                let _ = to.write_all(&len_buf);
+                let _ = to.write_all(&payload[..keep]);
+                let _ = to.flush();
+                sever(&from, &to);
+                return;
+            }
+            Some(Fault::Drop) => {
+                stats.drops.fetch_add(1, Ordering::Relaxed);
+                count_fault("drop");
+                sever(&from, &to);
+                return;
+            }
+            None => {}
+        }
+        if to.write_all(&len_buf).is_err()
+            || to.write_all(&payload).is_err()
+            || to.flush().is_err()
+        {
+            sever(&from, &to);
+            return;
+        }
+    }
+}
+
+fn count_fault(kind: &'static str) {
+    obs::metrics()
+        .counter(
+            "emucxl_faultproxy_injected_total",
+            "faults injected by the test proxy, by kind",
+            &[("kind", kind)],
+        )
+        .inc();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_rate_schedule_injects_nothing() {
+        let mut rng = Rng::new(7);
+        let cfg = FaultConfig { fault_rate: 0.0, ..FaultConfig::default() };
+        for _ in 0..10_000 {
+            assert!(!(cfg.fault_rate > 0.0 && rng.chance(cfg.fault_rate)));
+        }
+    }
+
+    #[test]
+    fn stats_total_sums_all_kinds() {
+        let s = FaultStats::default();
+        s.delays.fetch_add(1, Ordering::Relaxed);
+        s.drops.fetch_add(2, Ordering::Relaxed);
+        s.truncations.fetch_add(3, Ordering::Relaxed);
+        s.corruptions.fetch_add(4, Ordering::Relaxed);
+        assert_eq!(s.injected(), 10);
+        assert_eq!(s.frames.load(Ordering::Relaxed), 0);
+    }
+}

@@ -1,6 +1,7 @@
 //! Multi-process pool coordinator (paper §VI future work).
 pub mod batcher;
 pub mod client;
+pub mod faultproxy;
 pub mod proto;
 pub mod server;
 pub mod tenant;

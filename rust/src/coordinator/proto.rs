@@ -263,10 +263,16 @@ impl Response {
 
 /// Write one length-prefixed frame.
 pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
-    let len = payload.len() as u32;
-    if len > MAX_FRAME {
-        return Err(EmucxlError::Protocol(format!("frame too large: {len}")));
+    // Compare BEFORE casting: `payload.len() as u32` wraps on >4 GiB
+    // payloads, which would sail past the check and emit a frame whose
+    // length prefix disagrees with its body — a corrupt stream.
+    if payload.len() > MAX_FRAME as usize {
+        return Err(EmucxlError::Protocol(format!(
+            "frame too large: {}",
+            payload.len()
+        )));
     }
+    let len = payload.len() as u32;
     w.write_all(&len.to_le_bytes())?;
     w.write_all(payload)?;
     w.flush()?;
@@ -375,5 +381,38 @@ mod tests {
         buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
         let mut r = &buf[..];
         assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn oversized_payload_write_rejected_without_emitting_bytes() {
+        let payload = vec![0u8; MAX_FRAME as usize + 1];
+        let mut buf = Vec::new();
+        assert!(write_frame(&mut buf, &payload).is_err());
+        // Nothing hit the stream — a half-written length prefix would
+        // desync every later frame on the connection.
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn max_frame_payload_exactly_fits() {
+        let payload = vec![7u8; MAX_FRAME as usize];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap().len(), payload.len());
+    }
+
+    #[test]
+    fn corrupted_request_frame_fails_decode() {
+        // A fault-proxy-style single-byte flip must surface as a protocol
+        // error, never a silently different request.
+        let mut buf = Request::KvGet { key: b"key".to_vec() }.encode();
+        let last = buf.len() - 1;
+        buf[1] ^= 0xFF; // mangle the key-length field
+        assert!(Request::decode(&buf).is_err());
+        buf[1] ^= 0xFF;
+        buf[last] ^= 0x01; // mangle payload content: decodes, but differs
+        let got = Request::decode(&buf).unwrap();
+        assert_ne!(got, Request::KvGet { key: b"key".to_vec() });
     }
 }

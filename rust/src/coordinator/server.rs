@@ -49,6 +49,23 @@
 //! `/healthz` to stock HTTP scrapers; it reads only the process-global
 //! registry/recorder plus the tenants lock and atomic clock, so scrapes
 //! never contend with the ctx data path.
+//!
+//! # Connection lifecycle and cleanup
+//!
+//! Every connection thread runs `connection_loop` and then — no matter how
+//! the loop ended (clean `Bye`, EOF, a malformed frame, an IO error, or an
+//! idle-deadline expiry) — the **unconditional** disconnect cleanup:
+//! remove the tenant from the table and free every allocation it still
+//! owns. Error paths MUST NOT return around this block; that is exactly
+//! the bug class that used to pin a tenant (and its pool bytes) forever
+//! after one bad frame. Malformed frames are answered with a
+//! `Response::Error` before the connection closes, so a confused client
+//! learns why instead of seeing a silent hangup. Dead clients that stop
+//! sending entirely are reaped by the per-connection idle read deadline
+//! ([`PoolConfig::idle_timeout`]), which lands on the same cleanup path.
+//! `accept_loop` itself degrades gracefully: if a handler thread cannot be
+//! spawned (fd/thread exhaustion), the connection is answered with
+//! `Response::Error` and closed — the daemon never panics on load.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -96,6 +113,11 @@ pub struct PoolConfig {
     /// [`PoolServer::metrics_addr`]). `None` keeps observability
     /// wire-protocol-only.
     pub metrics_listen: Option<u16>,
+    /// Per-connection idle read deadline: a connection that sends no
+    /// complete frame for this long is reaped (disconnect cleanup frees
+    /// the tenant's allocations), so a dead or wedged client can't pin a
+    /// tenant forever. `None` = wait forever (pre-resilience behaviour).
+    pub idle_timeout: Option<Duration>,
 }
 
 impl Default for PoolConfig {
@@ -110,6 +132,7 @@ impl Default for PoolConfig {
             trace_dump: None,
             recorder_capacity: None,
             metrics_listen: None,
+            idle_timeout: Some(Duration::from_secs(300)),
         }
     }
 }
@@ -127,6 +150,8 @@ struct SharedPool {
     clock: Arc<VirtualClock>,
     batcher: TimingBatcher,
     stop: AtomicBool,
+    /// Per-connection idle read deadline (see [`PoolConfig::idle_timeout`]).
+    idle_timeout: Option<Duration>,
 }
 
 /// Serves the pool's registry and recorder over HTTP: refreshes the
@@ -204,6 +229,7 @@ impl PoolServer {
             clock,
             batcher,
             stop: AtomicBool::new(false),
+            idle_timeout: config.idle_timeout,
         });
         // Start the HTTP plane before the wire accept loop: if its port is
         // taken, the `?` returns with no accept thread spawned — `listener`
@@ -217,10 +243,11 @@ impl PoolServer {
             None => None,
         };
         let s2 = Arc::clone(&shared);
+        // Spawn failure at startup is an error the caller can act on, not
+        // a panic: the listener and HTTP plane drop cleanly behind the `?`.
         let accept = std::thread::Builder::new()
             .name("emucxl-accept".into())
-            .spawn(move || accept_loop(listener, s2))
-            .expect("spawn accept loop");
+            .spawn(move || accept_loop(listener, s2))?;
         Ok(Self { addr, shared, accept: Some(accept), trace_dump: config.trace_dump, http })
     }
 
@@ -294,15 +321,34 @@ fn accept_loop(listener: TcpListener, shared: Arc<SharedPool>) {
         // Reap finished connections so a long-lived daemon doesn't grow
         // the handle vector without bound.
         handlers.retain(|h| !h.is_finished());
+        // Keep a reply handle so spawn failure (thread/fd exhaustion under
+        // load) can answer the connection instead of panicking the daemon.
+        let reply = stream.try_clone();
         let s2 = Arc::clone(&shared);
-        handlers.push(
-            std::thread::Builder::new()
-                .name("emucxl-conn".into())
-                .spawn(move || {
-                    let _ = serve_connection(stream, s2);
-                })
-                .expect("spawn connection handler"),
-        );
+        let spawned = std::thread::Builder::new()
+            .name("emucxl-conn".into())
+            .spawn(move || serve_connection(stream, s2));
+        match spawned {
+            Ok(h) => handlers.push(h),
+            Err(e) => {
+                obs::metrics()
+                    .counter(
+                        "emucxl_coordinator_accept_overload_total",
+                        "connections refused because a handler could not be spawned",
+                        &[],
+                    )
+                    .inc();
+                if let Ok(s) = reply {
+                    let mut w = BufWriter::new(s);
+                    let resp = Response::Error {
+                        msg: format!("coordinator overloaded: {e}"),
+                    };
+                    let _ = write_frame(&mut w, &resp.encode());
+                }
+                // the streams (clone and original) drop here: connection
+                // closed, daemon keeps serving everyone else
+            }
+        }
     }
     for h in handlers {
         let _ = h.join();
@@ -438,35 +484,18 @@ fn node_flag(node: u32) -> u32 {
     }
 }
 
-fn serve_connection(stream: TcpStream, shared: Arc<SharedPool>) -> Result<()> {
+fn serve_connection(stream: TcpStream, shared: Arc<SharedPool>) {
     stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+    // Dead-client reaping: a connection that sends nothing for the idle
+    // deadline wakes the read with WouldBlock/TimedOut, ends the loop, and
+    // lands on the same cleanup as a disconnect.
+    let _ = stream.set_read_timeout(shared.idle_timeout);
     let mut tenant_id: Option<u32> = None;
-
-    loop {
-        let frame = match read_frame(&mut reader)? {
-            Some(f) => f,
-            None => break, // client hung up
-        };
-        let req = Request::decode(&frame)?;
-        let op = op_name(&req);
-        // One span per request; nested subsystem events share it.
-        let _span = obs::span(tenant_id.unwrap_or(0));
-        let wall0 = Instant::now();
-        if matches!(req, Request::Bye) {
-            write_frame(&mut writer, &Response::Ok { lat_ns: 0.0 }.encode())?;
-            record_request(&shared, tenant_id, op, wall0, true);
-            break;
-        }
-        let resp = handle_request(&shared, &mut tenant_id, req);
-        let ok = !matches!(resp, Response::Error { .. });
-        write_frame(&mut writer, &resp.encode())?;
-        record_request(&shared, tenant_id, op, wall0, ok);
-        if shared.stop.load(Ordering::SeqCst) {
-            break;
-        }
-    }
+    // The request loop may end for many reasons (Bye, EOF, malformed
+    // frame, IO error, idle expiry) — cleanup below runs for ALL of them.
+    // `?` inside the loop must never bypass it; that exact bug used to
+    // leak the tenant's registration and allocations on one bad frame.
+    let _ = connection_loop(stream, &shared, &mut tenant_id);
 
     // Disconnect: reclaim everything the tenant still owns.
     // Lock order tenants -> ctx: take the table entry out first, then free.
@@ -485,6 +514,80 @@ fn serve_connection(stream: TcpStream, shared: Arc<SharedPool>) -> Result<()> {
         obs::metrics()
             .gauge("emucxl_coordinator_tenants", "currently registered tenants", &[])
             .set(count as i64);
+    }
+}
+
+/// The per-connection request loop. Returns when the client says `Bye`,
+/// hangs up, goes idle past the deadline, or breaks the protocol; the
+/// caller runs disconnect cleanup unconditionally afterwards, so `?` in
+/// here can never leak a tenant.
+fn connection_loop(
+    stream: TcpStream,
+    shared: &Arc<SharedPool>,
+    tenant_id: &mut Option<u32>,
+) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let frame = match read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // client hung up
+            Err(e) => {
+                if matches!(
+                    &e,
+                    EmucxlError::Io(io) if matches!(
+                        io.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    )
+                ) {
+                    // Idle deadline expired: reap the dead client.
+                    obs::metrics()
+                        .counter(
+                            "emucxl_coordinator_idle_reaps_total",
+                            "connections reaped by the idle read deadline",
+                            &[],
+                        )
+                        .inc();
+                    let ts = shared.clock.now_ns();
+                    obs::record(Subsystem::Coordinator, "idle_reap", ts, 0, 0, 0.0, false);
+                    break;
+                }
+                return Err(e);
+            }
+        };
+        let req = match Request::decode(&frame) {
+            Ok(r) => r,
+            Err(e) => {
+                // Tell the client why before closing: a malformed frame
+                // means the stream is desynced, so the connection cannot
+                // continue — but it must not die silently either.
+                obs::metrics()
+                    .counter(
+                        "emucxl_coordinator_bad_frames_total",
+                        "connections dropped on an undecodable request frame",
+                        &[],
+                    )
+                    .inc();
+                let _ = write_frame(&mut writer, &err_resp(&e).encode());
+                return Err(e);
+            }
+        };
+        let op = op_name(&req);
+        // One span per request; nested subsystem events share it.
+        let _span = obs::span(tenant_id.unwrap_or(0));
+        let wall0 = Instant::now();
+        if matches!(req, Request::Bye) {
+            write_frame(&mut writer, &Response::Ok { lat_ns: 0.0 }.encode())?;
+            record_request(shared, *tenant_id, op, wall0, true);
+            break;
+        }
+        let resp = handle_request(shared, tenant_id, req);
+        let ok = !matches!(resp, Response::Error { .. });
+        write_frame(&mut writer, &resp.encode())?;
+        record_request(shared, *tenant_id, op, wall0, ok);
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
     }
     Ok(())
 }
@@ -539,6 +642,14 @@ fn handle_request(
     }
     match req {
         Request::Hello { quota } => {
+            // Re-registration on a live connection would overwrite
+            // `tenant_id`, orphaning the first tenant's table entry and
+            // allocations until process exit. Reject it.
+            if tenant_id.is_some() {
+                return Response::Error {
+                    msg: "already registered: one Hello per connection".into(),
+                };
+            }
             let count;
             let id = {
                 let mut tenants = shared.tenants.lock().unwrap();

@@ -35,6 +35,14 @@ pub enum EmucxlError {
     Protocol(String),
     /// Tenant exceeded its memory quota.
     QuotaExceeded { tenant: u32, requested: usize, quota: usize },
+    /// A wire operation exceeded its configured deadline. The request may
+    /// or may not have reached (or been applied by) the coordinator.
+    Timeout { op: &'static str },
+    /// A transient transport failure on a non-idempotent request: the
+    /// connection died mid-flight, so the operation may or may not have
+    /// been applied. The client does NOT retry these automatically — the
+    /// caller must decide whether re-issuing is safe for its workload.
+    Retriable { op: &'static str, cause: String },
     /// Underlying I/O error (coordinator sockets, trace files).
     Io(std::io::Error),
 }
@@ -65,6 +73,12 @@ impl fmt::Display for EmucxlError {
             Self::QuotaExceeded { tenant, requested, quota } => write!(
                 f,
                 "tenant {tenant} quota exceeded: requested {requested} B over quota {quota} B"
+            ),
+            Self::Timeout { op } => write!(f, "{op} timed out (deadline exceeded)"),
+            Self::Retriable { op, cause } => write!(
+                f,
+                "{op} failed on a dead connection ({cause}); outcome unknown, \
+                 caller may retry"
             ),
             Self::Io(e) => write!(f, "io error: {e}"),
         }
@@ -109,5 +123,13 @@ mod tests {
     #[test]
     fn bad_address_is_hex() {
         assert!(EmucxlError::BadAddress(0xdead).to_string().contains("0xdead"));
+    }
+
+    #[test]
+    fn timeout_and_retriable_name_the_op() {
+        assert!(EmucxlError::Timeout { op: "read" }.to_string().contains("read"));
+        let e = EmucxlError::Retriable { op: "write", cause: "reset".into() };
+        let s = e.to_string();
+        assert!(s.contains("write") && s.contains("reset"));
     }
 }

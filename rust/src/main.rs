@@ -8,12 +8,14 @@
 //! emucxl table3 [--ops N --trials T]  paper Table III (queue)
 //! emucxl table4 [--gets N]            paper Table IV (KV policies)
 //! emucxl serve [--port P] [--artifacts DIR] [--trace-dump FILE] [--no-warmup]
-//!              [--metrics-listen PORT] [--kv-shards N]
+//!              [--metrics-listen PORT] [--kv-shards N] [--idle-timeout SECS]
 //!                                     pool coordinator daemon
 //! emucxl stats [--host H --port P] [--raw] [--trace N] [--listen PORT]
 //!                                     metrics/trace of a running daemon
 //! emucxl soak [--host H --port P --writers N --iters N --bytes N]
-//!                                     multi-writer soak against a daemon
+//!             [--fault-rate F --fault-delay-ms D --fault-seed S]
+//!                                     multi-writer soak against a daemon,
+//!                                     optionally through a fault proxy
 //! emucxl replay --trace FILE [--artifacts DIR] trace through window model
 //! emucxl calibrate --local NS --remote NS [--artifacts DIR]
 //! ```
@@ -189,6 +191,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         cfg.metrics_listen = Some(listen_port(v, "metrics-listen")?);
     }
     cfg.kv_shards = get(flags, "kv-shards", cfg.kv_shards);
+    // 0 = never reap idle connections (the pre-resilience behaviour).
+    let idle_secs: u64 = get(
+        flags,
+        "idle-timeout",
+        cfg.idle_timeout.map(|d| d.as_secs()).unwrap_or(0),
+    );
+    cfg.idle_timeout = if idle_secs == 0 {
+        None
+    } else {
+        Some(std::time::Duration::from_secs(idle_secs))
+    };
     if !flags.contains_key("no-warmup") {
         warmup()?;
     }
@@ -204,53 +217,188 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
 }
 
+/// One fault-tolerant soak writer: every op may die mid-flight (the fault
+/// proxy injects drops/delays/truncations/corruptions), so the writer
+/// re-establishes its state — reconnect happens transparently inside the
+/// client; the app level re-allocates when its allocation died with the
+/// old tenant — and keeps going. Readback is only compared when the write
+/// and the read demonstrably ran on the same tenant incarnation (the
+/// client re-registers on reconnect, so `tenant_id` doubles as a
+/// connection-generation counter).
+fn soak_writer_faulty(
+    t: u32,
+    addr: std::net::SocketAddr,
+    iters: u32,
+    bytes: usize,
+) -> Result<()> {
+    use emucxl::coordinator::client::ClientConfig;
+    use emucxl::error::EmucxlError;
+
+    let quota = (bytes as u64).saturating_mul(4);
+    let config = ClientConfig {
+        connect_timeout: std::time::Duration::from_secs(5),
+        read_timeout: Some(std::time::Duration::from_secs(2)),
+        write_timeout: Some(std::time::Duration::from_secs(2)),
+        max_retries: 8,
+        backoff_base: std::time::Duration::from_millis(5),
+        backoff_cap: std::time::Duration::from_millis(200),
+    };
+    let mut c = PoolClient::connect_with(addr, quota, config)?;
+    let mut base: Option<u64> = None;
+    let mut completed: u32 = 0;
+    let mut consecutive_failures: u32 = 0;
+    while completed < iters {
+        if consecutive_failures > 50 {
+            return Err(EmucxlError::Protocol(format!(
+                "writer {t}: {consecutive_failures} consecutive failures — daemon gone?"
+            )));
+        }
+        let addr_now = match base {
+            Some(a) => a,
+            None => match c.alloc(bytes as u64, t % 2) {
+                Ok((a, _)) => {
+                    base = Some(a);
+                    a
+                }
+                Err(_) => {
+                    consecutive_failures += 1;
+                    continue;
+                }
+            },
+        };
+        let tag = (t as u8)
+            .wrapping_mul(31)
+            .wrapping_add(completed as u8)
+            .wrapping_add(1);
+        let expect = vec![tag; bytes];
+        let write_tenant = c.tenant_id();
+        if c.write(addr_now, &expect).is_err() {
+            // Mid-flight death or a stale address from a reaped tenant:
+            // either way the allocation can't be trusted any more.
+            base = None;
+            consecutive_failures += 1;
+            continue;
+        }
+        if completed % 16 == 0 {
+            match c.read(addr_now, bytes as u32) {
+                // Same tenant incarnation for write AND read: the data
+                // must match exactly — faults may slow or kill
+                // connections, but must never corrupt committed bytes.
+                Ok((data, _)) if c.tenant_id() == write_tenant => {
+                    if data != expect {
+                        return Err(EmucxlError::Protocol(format!(
+                            "writer {t}: corrupt readback at iter {completed}"
+                        )));
+                    }
+                }
+                Ok(_) => {} // reconnected mid-read: stale expectations
+                Err(_) => {
+                    base = None;
+                    consecutive_failures += 1;
+                    continue;
+                }
+            }
+        }
+        completed += 1;
+        consecutive_failures = 0;
+    }
+    if let Some(a) = base {
+        let _ = c.free(a);
+    }
+    let _ = c.bye();
+    Ok(())
+}
+
+/// The fault-free writer: any error is fatal (this is the strict mode CI
+/// runs against a healthy daemon — nothing should fail).
+fn soak_writer_strict(
+    t: u32,
+    addr: std::net::SocketAddr,
+    iters: u32,
+    bytes: usize,
+) -> Result<()> {
+    let quota = (bytes as u64).saturating_mul(4);
+    let mut c = PoolClient::connect(addr, quota)?;
+    // Spread writers across both nodes so disjoint writes
+    // exercise per-node parallelism, not just lock fairness.
+    let (base, _) = c.alloc(bytes as u64, t % 2)?;
+    let mut expect = Vec::new();
+    for i in 0..iters {
+        let tag = (t as u8).wrapping_mul(31).wrapping_add(i as u8).wrapping_add(1);
+        expect = vec![tag; bytes];
+        c.write(base, &expect)?;
+        if i % 16 == 0 {
+            let (data, _) = c.read(base, bytes as u32)?;
+            if data != expect {
+                return Err(emucxl::error::EmucxlError::Protocol(format!(
+                    "writer {t}: corrupt readback at iter {i}"
+                )));
+            }
+        }
+    }
+    let (data, _) = c.read(base, bytes as u32)?;
+    if data != expect {
+        return Err(emucxl::error::EmucxlError::Protocol(format!(
+            "writer {t}: corrupt final readback"
+        )));
+    }
+    c.free(base)?;
+    c.bye()
+}
+
 /// Multi-writer soak against a live daemon: N writer tenants, each with a
 /// private allocation spread across both nodes, hammer disjoint writes and
 /// verify readback. Exits non-zero on any corruption or wire error — the
 /// CI scrape-smoke job runs this against `emucxl serve` to exercise the
 /// concurrent write path end to end in a real process.
+///
+/// With `--fault-rate F` (0 < F ≤ 1) an in-process [`FaultProxy`] is
+/// spliced between the writers and the daemon, injecting connection
+/// drops, delays, frame truncation and byte corruption at rate F per
+/// frame; writers switch to the retrying fault-tolerant loop, and the
+/// soak additionally verifies that the daemon drained cleanly (allocated
+/// pool bytes back to zero) once every writer disconnected — the CI
+/// fault-smoke job runs this mode.
 fn cmd_soak(flags: &HashMap<String, String>) -> Result<()> {
+    use emucxl::coordinator::faultproxy::{FaultConfig, FaultProxy};
+
     let host = flags.get("host").cloned().unwrap_or_else(|| "127.0.0.1".into());
     let port = get(flags, "port", 7117u16);
     let writers: u32 = get(flags, "writers", 4);
     let iters: u32 = std::cmp::max(get(flags, "iters", 200), 1);
     let bytes: usize = std::cmp::max(get(flags, "bytes", 4096), 1);
-    let addr: std::net::SocketAddr = format!("{host}:{port}").parse().map_err(|_| {
+    let fault_rate: f64 = get(flags, "fault-rate", 0.0);
+    let daemon: std::net::SocketAddr = format!("{host}:{port}").parse().map_err(|_| {
         emucxl::error::EmucxlError::InvalidArgument(format!("bad --host {host}"))
     })?;
+
+    let proxy = if fault_rate > 0.0 {
+        let cfg = FaultConfig {
+            fault_rate,
+            delay: std::time::Duration::from_millis(get(flags, "fault-delay-ms", 25)),
+            seed: get(flags, "fault-seed", 1),
+        };
+        let p = FaultProxy::start(daemon, cfg)?;
+        println!(
+            "fault proxy on {} -> {daemon} (rate {fault_rate} per frame)",
+            p.addr()
+        );
+        Some(p)
+    } else {
+        None
+    };
+    let addr = proxy.as_ref().map(|p| p.addr()).unwrap_or(daemon);
 
     let wall = std::time::Instant::now();
     let handles: Vec<_> = (0..writers)
         .map(|t| {
+            let faulty = fault_rate > 0.0;
             std::thread::spawn(move || -> Result<()> {
-                let quota = (bytes as u64).saturating_mul(4);
-                let mut c = PoolClient::connect(addr, quota)?;
-                // Spread writers across both nodes so disjoint writes
-                // exercise per-node parallelism, not just lock fairness.
-                let (base, _) = c.alloc(bytes as u64, t % 2)?;
-                let mut expect = Vec::new();
-                for i in 0..iters {
-                    let tag =
-                        (t as u8).wrapping_mul(31).wrapping_add(i as u8).wrapping_add(1);
-                    expect = vec![tag; bytes];
-                    c.write(base, &expect)?;
-                    if i % 16 == 0 {
-                        let (data, _) = c.read(base, bytes as u32)?;
-                        if data != expect {
-                            return Err(emucxl::error::EmucxlError::Protocol(format!(
-                                "writer {t}: corrupt readback at iter {i}"
-                            )));
-                        }
-                    }
+                if faulty {
+                    soak_writer_faulty(t, addr, iters, bytes)
+                } else {
+                    soak_writer_strict(t, addr, iters, bytes)
                 }
-                let (data, _) = c.read(base, bytes as u32)?;
-                if data != expect {
-                    return Err(emucxl::error::EmucxlError::Protocol(format!(
-                        "writer {t}: corrupt final readback"
-                    )));
-                }
-                c.free(base)?;
-                c.bye()
             })
         })
         .collect();
@@ -271,6 +419,42 @@ fn cmd_soak(flags: &HashMap<String, String>) -> Result<()> {
     }
     if failed {
         return Err(emucxl::error::EmucxlError::Protocol("soak failed".into()));
+    }
+    if let Some(p) = &proxy {
+        let s = p.stats();
+        use std::sync::atomic::Ordering::Relaxed;
+        println!(
+            "fault proxy: {} frames, {} delays, {} corruptions, {} truncations, {} drops",
+            s.frames.load(Relaxed),
+            s.delays.load(Relaxed),
+            s.corruptions.load(Relaxed),
+            s.truncations.load(Relaxed),
+            s.drops.load(Relaxed),
+        );
+    }
+    // The daemon must drain: once every writer has disconnected (cleanly
+    // or through an injected fault), disconnect cleanup frees all tenant
+    // allocations. Probe the daemon DIRECTLY (no proxy) and poll briefly —
+    // handler threads may still be running their cleanup.
+    let mut drained = false;
+    let mut last = (0, 0);
+    for _ in 0..50 {
+        let mut probe = PoolClient::connect(daemon, 1 << 20)?;
+        let (a0, _, _) = probe.stats(0)?;
+        let (a1, _, _) = probe.stats(1)?;
+        let _ = probe.bye();
+        last = (a0, a1);
+        if a0 + a1 == 0 {
+            drained = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    if !drained {
+        return Err(emucxl::error::EmucxlError::Protocol(format!(
+            "soak: daemon did not drain: {} B on node 0, {} B on node 1 still allocated",
+            last.0, last.1
+        )));
     }
     let total = u64::from(writers) * u64::from(iters);
     println!(
@@ -589,15 +773,19 @@ commands:
   table3 [--ops N --trials T]   paper Table III (queue)
   table4 [--gets N]             paper Table IV (KV policies)
   serve [--port P] [--artifacts DIR] [--trace-dump FILE] [--no-warmup]
-        [--metrics-listen PORT] [--kv-shards N]
+        [--metrics-listen PORT] [--kv-shards N] [--idle-timeout SECS]
                                 pool coordinator daemon; --metrics-listen
-                                serves /metrics, /trace, /healthz over HTTP
+                                serves /metrics, /trace, /healthz over HTTP;
+                                --idle-timeout reaps dead clients (0 = never)
   stats [--host H --port P] [--raw] [--trace N] [--listen PORT]
                                 metrics/trace of a running daemon;
                                 --listen runs a persistent scrape bridge
   soak [--host H --port P] [--writers N] [--iters N] [--bytes N]
+       [--fault-rate F] [--fault-delay-ms D] [--fault-seed S]
                                 multi-writer soak against a running daemon:
-                                disjoint writes + readback verification
+                                disjoint writes + readback verification;
+                                --fault-rate splices in a fault-injecting
+                                proxy and switches writers to retry mode
   replay --trace FILE [--artifacts DIR]
                                 trace through the window model
   calibrate --local NS --remote NS [--artifacts DIR]

@@ -19,6 +19,7 @@ fn server() -> PoolServer {
         trace_dump: None,
         recorder_capacity: None,
         metrics_listen: None,
+        idle_timeout: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }

@@ -27,6 +27,7 @@ fn server() -> PoolServer {
         // Exercise the PoolConfig knob and keep the soak test's ring small.
         recorder_capacity: Some(1024),
         metrics_listen: None,
+        idle_timeout: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }

@@ -1,0 +1,422 @@
+//! Wire-plane resilience tests: tenant-leak regressions on error paths,
+//! idle-connection reaping, client deadlines + retry/backoff, and a
+//! fault-injection soak through the [`FaultProxy`].
+//!
+//! The leak regressions pin the §VI multi-tenant contract: NO way a
+//! connection ends — clean `Bye`, EOF, malformed frame, mid-frame
+//! disconnect, double-`Hello`, idle expiry — may leave a tenant registered
+//! or its pool bytes allocated.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use emucxl::config::EmucxlConfig;
+use emucxl::coordinator::client::{ClientConfig, PoolClient};
+use emucxl::coordinator::faultproxy::{FaultConfig, FaultProxy};
+use emucxl::coordinator::proto::{read_frame, write_frame, Request, Response};
+use emucxl::coordinator::server::{PoolConfig, PoolServer};
+use emucxl::error::EmucxlError;
+use emucxl::middleware::kv::GetPolicy;
+
+fn server_with_idle(idle: Option<Duration>) -> PoolServer {
+    let cfg = PoolConfig {
+        emucxl: EmucxlConfig::sized(8 << 20, 32 << 20),
+        kv_local_capacity: 4,
+        kv_policy: GetPolicy::Promote,
+        kv_shards: 2,
+        batch: 16,
+        max_wait: Duration::from_micros(100),
+        trace_dump: None,
+        recorder_capacity: None,
+        metrics_listen: None,
+        idle_timeout: idle,
+    };
+    PoolServer::start(cfg, 0).expect("start server")
+}
+
+fn server() -> PoolServer {
+    server_with_idle(None)
+}
+
+/// Poll until `f` holds (handler threads run cleanup asynchronously).
+fn eventually(what: &str, mut f: impl FnMut() -> bool) {
+    for _ in 0..100 {
+        if f() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("timed out waiting for {what}");
+}
+
+/// Pool bytes still allocated, summed over both nodes, via a throwaway
+/// probe tenant (registered and said goodbye within the call).
+fn allocated_bytes(srv: &PoolServer) -> u64 {
+    let mut probe = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let (a0, _, _) = probe.stats(0).unwrap();
+    let (a1, _, _) = probe.stats(1).unwrap();
+    let _ = probe.bye();
+    a0 + a1
+}
+
+/// Raw framed connection, bypassing `PoolClient` so tests can speak
+/// malformed protocol.
+struct RawConn {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+    stream: TcpStream,
+}
+
+impl RawConn {
+    fn open(addr: std::net::SocketAddr) -> Self {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let r = BufReader::new(stream.try_clone().unwrap());
+        let w = BufWriter::new(stream.try_clone().unwrap());
+        Self { r, w, stream }
+    }
+
+    fn rpc(&mut self, req: &Request) -> Response {
+        write_frame(&mut self.w, &req.encode()).unwrap();
+        let frame = read_frame(&mut self.r).unwrap().expect("server closed");
+        Response::decode(&frame).unwrap()
+    }
+
+    fn hello(&mut self, quota: u64) -> u32 {
+        match self.rpc(&Request::Hello { quota }) {
+            Response::Welcome { tenant } => tenant,
+            other => panic!("expected Welcome, got {other:?}"),
+        }
+    }
+
+    fn alloc(&mut self, size: u64, node: u32) -> u64 {
+        match self.rpc(&Request::Alloc { size, node }) {
+            Response::Addr { addr, .. } => addr,
+            other => panic!("expected Addr, got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tenant-leak regressions
+
+#[test]
+fn malformed_frame_answers_error_then_reaps_tenant() {
+    let srv = server();
+    let mut c = RawConn::open(srv.addr());
+    c.hello(1 << 20);
+    c.alloc(4096, 0);
+    assert_eq!(srv.tenant_count(), 1);
+
+    // An undecodable frame (bad tag). The server must answer with a
+    // protocol error — not hang up silently — and then close.
+    write_frame(&mut c.w, &[99u8, 1, 2, 3]).unwrap();
+    match Response::decode(&read_frame(&mut c.r).unwrap().expect("reply before close")) {
+        Response::Error { msg } => assert!(msg.contains("tag"), "{msg}"),
+        other => panic!("expected Error, got {other:?}"),
+    }
+    // ...and the connection is closed afterwards.
+    assert!(matches!(read_frame(&mut c.r), Ok(None) | Err(_)));
+
+    // The leak regression: registration and allocations must be reclaimed.
+    eventually("tenant reaped after malformed frame", || srv.tenant_count() == 0);
+    assert_eq!(allocated_bytes(&srv), 0, "pool bytes leaked on decode error");
+}
+
+#[test]
+fn mid_frame_disconnect_reclaims_tenant() {
+    let srv = server();
+    let mut c = RawConn::open(srv.addr());
+    c.hello(1 << 20);
+    c.alloc(8192, 1);
+    assert_eq!(srv.tenant_count(), 1);
+
+    // Announce a 100-byte frame, deliver 10 bytes, vanish. The payload
+    // read fails with UnexpectedEof — an error path that used to `?` past
+    // the disconnect cleanup and leak the tenant.
+    c.w.write_all(&100u32.to_le_bytes()).unwrap();
+    c.w.write_all(&[5u8; 10]).unwrap();
+    c.w.flush().unwrap();
+    drop(c);
+
+    eventually("tenant reaped after mid-frame disconnect", || srv.tenant_count() == 0);
+    assert_eq!(allocated_bytes(&srv), 0, "pool bytes leaked on mid-frame EOF");
+}
+
+#[test]
+fn double_hello_rejected_and_nothing_orphaned() {
+    let srv = server();
+    let mut c = RawConn::open(srv.addr());
+    let first = c.hello(1 << 20);
+    let addr = c.alloc(4096, 0);
+
+    // Re-registration used to overwrite `tenant_id`, orphaning the first
+    // tenant's table entry and allocations forever. Now: protocol error.
+    match c.rpc(&Request::Hello { quota: 1 << 20 }) {
+        Response::Error { msg } => assert!(msg.contains("already registered"), "{msg}"),
+        other => panic!("expected Error, got {other:?}"),
+    }
+    assert_eq!(srv.tenant_count(), 1, "rejected Hello must not register");
+
+    // The connection keeps working as the ORIGINAL tenant...
+    match c.rpc(&Request::Write { addr, data: b"still mine".to_vec() }) {
+        Response::Ok { .. } => {}
+        other => panic!("expected Ok, got {other:?}"),
+    }
+    let _ = first;
+
+    // ...and a clean disconnect reclaims everything, proving no orphan.
+    let _ = c.rpc(&Request::Bye);
+    drop(c);
+    eventually("tenant reaped after Bye", || srv.tenant_count() == 0);
+    assert_eq!(allocated_bytes(&srv), 0, "double-Hello orphaned allocations");
+}
+
+#[test]
+fn idle_connection_is_reaped() {
+    let srv = server_with_idle(Some(Duration::from_millis(200)));
+    let mut c = RawConn::open(srv.addr());
+    c.hello(1 << 20);
+    c.alloc(4096, 0);
+    assert_eq!(srv.tenant_count(), 1);
+
+    // Say nothing. The per-connection idle read deadline must reap us and
+    // free the allocation — a dead client can't pin a tenant forever.
+    eventually("idle tenant reaped", || srv.tenant_count() == 0);
+    assert_eq!(allocated_bytes(&srv), 0, "idle reap leaked pool bytes");
+    // The reaped connection is actually closed server-side.
+    let gone = {
+        let mut w = BufWriter::new(c.stream.try_clone().unwrap());
+        write_frame(&mut w, &Request::Stats { node: 0 }.encode()).is_err()
+            || matches!(read_frame(&mut c.r), Ok(None) | Err(_))
+    };
+    assert!(gone, "connection should be dead after idle reap");
+}
+
+// ---------------------------------------------------------------------------
+// client deadlines + retry/backoff
+
+#[test]
+fn client_connect_times_out_against_a_black_hole() {
+    // A listener that accepts and never answers: Hello's reply read must
+    // hit the client's read deadline instead of blocking forever.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let hold = std::thread::spawn(move || {
+        let mut held = Vec::new();
+        for s in listener.incoming().take(3) {
+            held.push(s); // keep sockets open, say nothing
+        }
+        std::thread::sleep(Duration::from_secs(2));
+    });
+
+    let cfg = ClientConfig {
+        connect_timeout: Duration::from_secs(2),
+        read_timeout: Some(Duration::from_millis(100)),
+        write_timeout: Some(Duration::from_millis(100)),
+        max_retries: 2,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(5),
+    };
+    let t0 = std::time::Instant::now();
+    let err = PoolClient::connect_with(addr, 1 << 20, cfg).unwrap_err();
+    assert!(
+        matches!(&err, EmucxlError::Io(io) if matches!(
+            io.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        )),
+        "expected a deadline expiry, got {err}"
+    );
+    // 3 attempts x 100 ms deadline + backoff — far below blocking forever.
+    assert!(t0.elapsed() < Duration::from_secs(5));
+    drop(hold);
+}
+
+#[test]
+fn idempotent_request_survives_a_server_side_disconnect() {
+    // Server reaps idle connections at 200 ms; the client sleeps past the
+    // deadline, then issues an IDEMPOTENT request. The dead socket must be
+    // redialed transparently (new Hello, new tenant id) and the request
+    // must succeed.
+    let srv = server_with_idle(Some(Duration::from_millis(200)));
+    let cfg = ClientConfig {
+        read_timeout: Some(Duration::from_secs(5)),
+        max_retries: 3,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(10),
+        ..ClientConfig::default()
+    };
+    let mut c = PoolClient::connect_with(srv.addr(), 1 << 20, cfg).unwrap();
+    let first_tenant = c.tenant_id();
+    eventually("server reaps the idle client", || srv.tenant_count() == 0);
+
+    let (allocated, _, _) = c.stats(0).expect("stats must retry through reconnect");
+    assert_eq!(allocated, 0);
+    assert_ne!(c.tenant_id(), first_tenant, "reconnect re-registers");
+
+    let m = emucxl::obs::metrics().render();
+    assert!(
+        m.contains("emucxl_client_retries_total"),
+        "retry counter must be registered after a retry:\n{m}"
+    );
+}
+
+#[test]
+fn non_idempotent_request_fails_fast_on_dead_connection() {
+    let srv = server_with_idle(Some(Duration::from_millis(200)));
+    let cfg = ClientConfig {
+        max_retries: 5,
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(10),
+        ..ClientConfig::default()
+    };
+    let mut c = PoolClient::connect_with(srv.addr(), 1 << 20, cfg).unwrap();
+    let (addr, _) = c.alloc(4096, 0).unwrap();
+    eventually("server reaps the idle client", || srv.tenant_count() == 0);
+
+    // The connection is dead; Write is non-idempotent. The FIRST failure
+    // may be pre-send (EOF noticed while writing) and redial — but then
+    // the redialed tenant no longer owns `addr`, so the server answers an
+    // authoritative error. Either way: no transparent success, and no
+    // hang. What must NOT happen is a silent retry loop reporting Ok.
+    let err = c.write(addr, b"outcome unknown").unwrap_err();
+    match err {
+        EmucxlError::Retriable { op, .. } | EmucxlError::Timeout { op } => {
+            assert_eq!(op, "write");
+        }
+        EmucxlError::Protocol(msg) => {
+            assert!(msg.contains("not mapped"), "unexpected protocol error: {msg}")
+        }
+        other => panic!("unexpected error class: {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fault-injection soak (acceptance criterion)
+
+/// The retrying writer the `emucxl soak --fault-rate` CLI mode uses,
+/// compacted for the in-process soak.
+fn faulty_writer(t: u32, addr: std::net::SocketAddr, iters: u32, bytes: usize) {
+    let cfg = ClientConfig {
+        connect_timeout: Duration::from_secs(5),
+        read_timeout: Some(Duration::from_secs(2)),
+        write_timeout: Some(Duration::from_secs(2)),
+        max_retries: 8,
+        backoff_base: Duration::from_millis(2),
+        backoff_cap: Duration::from_millis(50),
+    };
+    let mut c = PoolClient::connect_with(addr, (bytes as u64) * 4, cfg).unwrap();
+    let mut base: Option<u64> = None;
+    let mut completed = 0u32;
+    let mut stuck = 0u32;
+    while completed < iters {
+        assert!(stuck < 200, "writer {t} made no progress for 200 attempts");
+        let a = match base {
+            Some(a) => a,
+            None => match c.alloc(bytes as u64, t % 2) {
+                Ok((a, _)) => {
+                    base = Some(a);
+                    a
+                }
+                Err(_) => {
+                    stuck += 1;
+                    continue;
+                }
+            },
+        };
+        let tag = (t as u8).wrapping_mul(31).wrapping_add(completed as u8);
+        let expect = vec![tag; bytes];
+        let generation = c.tenant_id();
+        if c.write(a, &expect).is_err() {
+            base = None;
+            stuck += 1;
+            continue;
+        }
+        if completed % 8 == 0 {
+            match c.read(a, bytes as u32) {
+                Ok((data, _)) if c.tenant_id() == generation => {
+                    assert_eq!(data, expect, "writer {t}: corrupt committed data");
+                }
+                Ok(_) => {}
+                Err(_) => {
+                    base = None;
+                    stuck += 1;
+                    continue;
+                }
+            }
+        }
+        completed += 1;
+        stuck = 0;
+    }
+    if let Some(a) = base {
+        let _ = c.free(a);
+    }
+    let _ = c.bye();
+}
+
+#[test]
+fn fault_soak_drains_cleanly() {
+    // Acceptance criterion: drops/delays/truncations/corruptions at 5% per
+    // frame; a multi-writer retrying soak completes with no daemon panic,
+    // tenant count back to 0, and zero leaked pool bytes.
+    let srv = server_with_idle(Some(Duration::from_secs(2)));
+    let mut proxy = FaultProxy::start(
+        srv.addr(),
+        FaultConfig {
+            fault_rate: 0.05,
+            delay: Duration::from_millis(5),
+            seed: 42,
+        },
+    )
+    .unwrap();
+    let paddr = proxy.addr();
+
+    let handles: Vec<_> = (0..4u32)
+        .map(|t| std::thread::spawn(move || faulty_writer(t, paddr, 60, 2048)))
+        .collect();
+    for h in handles {
+        h.join().expect("writer panicked");
+    }
+
+    let injected = proxy.stats().injected();
+    assert!(injected > 0, "fault schedule never fired — soak proved nothing");
+
+    // Every writer is gone (cleanly or by injected fault): the daemon must
+    // drain back to zero tenants and zero allocated bytes.
+    eventually("all soak tenants reaped", || srv.tenant_count() == 0);
+    eventually("all pool bytes credited back", || allocated_bytes(&srv) == 0);
+
+    // The daemon survived and still serves new tenants, bypassing faults.
+    let mut c = PoolClient::connect(srv.addr(), 1 << 20).unwrap();
+    let (a, _) = c.alloc(4096, 0).unwrap();
+    c.write(a, b"after the storm").unwrap();
+    let (data, _) = c.read(a, 15).unwrap();
+    assert_eq!(&data, b"after the storm");
+    c.free(a).unwrap();
+    c.bye().unwrap();
+
+    proxy.shutdown();
+}
+
+#[test]
+fn transparent_proxy_at_zero_rate_is_invisible() {
+    let srv = server();
+    let proxy = FaultProxy::start(
+        srv.addr(),
+        FaultConfig { fault_rate: 0.0, ..FaultConfig::default() },
+    )
+    .unwrap();
+    let mut c = PoolClient::connect(proxy.addr(), 1 << 20).unwrap();
+    let (a, _) = c.alloc(4096, 1).unwrap();
+    c.write(a, b"through the proxy").unwrap();
+    let (data, _) = c.read(a, 17).unwrap();
+    assert_eq!(&data, b"through the proxy");
+    c.free(a).unwrap();
+    c.bye().unwrap();
+    assert_eq!(proxy.stats().injected(), 0);
+    assert!(proxy.stats().frames.load(std::sync::atomic::Ordering::Relaxed) > 0);
+}

@@ -26,6 +26,7 @@ fn server() -> PoolServer {
         trace_dump: None,
         recorder_capacity: None,
         metrics_listen: None,
+        idle_timeout: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }
@@ -198,6 +199,7 @@ fn shutdown_writes_trace_dump_file() {
         trace_dump: Some(path.clone()),
         recorder_capacity: None,
         metrics_listen: None,
+        idle_timeout: None,
     };
     let mut srv = PoolServer::start(cfg, 0).expect("start server");
     let mut client = PoolClient::connect(srv.addr(), 1 << 20).unwrap();

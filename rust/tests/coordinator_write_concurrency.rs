@@ -29,6 +29,7 @@ fn server() -> PoolServer {
         trace_dump: None,
         recorder_capacity: Some(1024),
         metrics_listen: None,
+        idle_timeout: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }

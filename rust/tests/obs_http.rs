@@ -29,6 +29,7 @@ fn server(metrics_listen: Option<u16>) -> PoolServer {
         trace_dump: None,
         recorder_capacity: None,
         metrics_listen,
+        idle_timeout: None,
     };
     PoolServer::start(cfg, 0).expect("start server")
 }
